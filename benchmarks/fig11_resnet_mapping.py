@@ -1,0 +1,46 @@
+"""Paper Fig. 11: MATCH's per-block mapping of ResNet on GAP9.
+
+Emits the dispatcher's decision for every ResNet segment (which HW
+module runs it, and the per-module predicted cycles) — the decision
+breakdown the paper visualises: NE16 takes the convolutions, the
+cluster takes the residual additions and the final dense block, the
+CPU keeps the average pooling.
+"""
+
+from __future__ import annotations
+
+from repro.cnn import resnet8_graph
+from repro.core import dispatch
+from repro.targets import make_gap9_target
+
+from .common import emit, timed
+
+
+def run() -> list[str]:
+    g = resnet8_graph()
+    tgt = make_gap9_target()
+    mg, us = timed(dispatch, g, tgt)
+    rows = []
+    for seg in mg.segments:
+        anchor = seg.anchor
+        rows.append(
+            emit(
+                f"fig11_{anchor.name}",
+                0.0,
+                f"op={anchor.op};module={seg.module};cycles={seg.cycles:.0f};pattern={seg.pattern}",
+            )
+        )
+    mods = mg.cycles_by_module()
+    rows.append(
+        emit(
+            "fig11_summary",
+            us,
+            ";".join(f"{k}_cycles={v:.0f}" for k, v in mods.items())
+            + f";total_ms={mg.latency_s()*1e3:.3f}",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

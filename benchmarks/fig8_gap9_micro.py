@@ -1,0 +1,45 @@
+"""Paper Fig. 8: GAP9 micro-benchmark — conv sweep on cluster AND NE16.
+
+Reports per-module predicted MACs/cycle (the dispatcher's view) plus
+the heterogeneous argmin choice for each geometry.
+"""
+
+from __future__ import annotations
+
+from repro.cnn import conv_block_graph
+from repro.core import clear_schedule_cache, dispatch
+from repro.targets import make_gap9_target
+
+from .common import emit, timed
+
+
+def run() -> list[str]:
+    tgt = make_gap9_target()
+    cluster = tgt.restricted(["cluster"])
+    ne16 = tgt.restricted(["ne16"])
+    rows = []
+    for depthwise in (False, True):
+        for c in (1, 16, 64):
+            for ix in (8, 32, 128):
+                g = conv_block_graph(IX=ix, IY=ix, C=c, K=c, depthwise=depthwise)
+                clear_schedule_cache()
+                full, us = timed(dispatch, g, tgt)
+                cl = dispatch(g, cluster)
+                ne = dispatch(g, ne16)
+                cpu = dispatch(g, tgt.restricted([]))
+                kind = "dw" if depthwise else "std"
+                chosen = full.segments[0].module
+                rows.append(
+                    emit(
+                        f"fig8_gap9_{kind}_c{c}_ix{ix}",
+                        us,
+                        f"chosen={chosen};cluster_macs_cyc={cl.macs_per_cycle():.2f};"
+                        f"ne16_macs_cyc={ne.macs_per_cycle():.2f};"
+                        f"speedup_vs_cpu={cpu.total_cycles()/full.total_cycles():.1f}",
+                    )
+                )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Figs. 9/10: MACs/cycle vs L1 size on DIANA and GAP9.
+
+Demonstrates schedule adaptation under memory pressure: MATCH re-tiles
+per L1 size and keeps deploying where heuristic tilers fail.
+"""
+
+from __future__ import annotations
+
+from repro.cnn import mlperf_tiny_networks
+from repro.core import clear_schedule_cache, dispatch
+from repro.targets import make_diana_target, make_gap9_target
+
+from .common import emit, timed
+
+
+def run() -> list[str]:
+    rows = []
+    nets = mlperf_tiny_networks()
+    for tname, mk in (("diana", make_diana_target), ("gap9", make_gap9_target)):
+        for name in ("MobileNet", "ResNet", "DSCNN", "DAE"):
+            g = nets[name]
+            pts = []
+            us_total = 0.0
+            for l1_kb in (128, 64, 48, 32, 24, 16, 12, 8):
+                tgt = mk().scaled_l1(l1_kb * 1024)
+                clear_schedule_cache()
+                mg, us = timed(dispatch, g, tgt)
+                us_total += us
+                pts.append(f"{l1_kb}kB:{mg.macs_per_cycle():.2f}")
+            rows.append(emit(f"fig9_10_{tname}_{name}", us_total, "macs_cyc@" + "|".join(pts)))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

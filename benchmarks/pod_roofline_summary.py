@@ -1,0 +1,45 @@
+"""Pod-scale summary: dry-run + roofline artifacts as CSV rows.
+
+Reads experiments/dryrun + experiments/roofline (produced by the launch
+entry points on the 512-device meshes) and emits one row per cell —
+the table behind EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run() -> list[str]:
+    rows = []
+    rdir = REPO / "experiments" / "roofline"
+    if not rdir.exists() or not list(rdir.glob("*.json")):
+        rows.append(emit("pod_roofline", 0.0, "not-run (python -m repro.launch.roofline --all)"))
+        return rows
+    for f in sorted(rdir.glob("*.json")):
+        if "__" not in f.stem or f.stem.count("__") > 1:
+            continue
+        r = json.loads(f.read_text())
+        if "error" in r:
+            rows.append(emit(f"roofline_{f.stem}", 0.0, f"error={r['error'][:60]}"))
+            continue
+        rows.append(
+            emit(
+                f"roofline_{f.stem}",
+                0.0,
+                f"strategy={r['strategy']};bound={r['bound']};"
+                f"compute_ms={r['compute_s']*1e3:.1f};memory_ms={r['memory_s']*1e3:.1f};"
+                f"collective_ms={r['collective_s']*1e3:.1f};mfu_proxy={r['mfu_proxy']*100:.1f}%;"
+                f"model_hlo_ratio={r['model_to_hlo_ratio']:.2f}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig7,table3,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from . import (
+        fig7_diana_micro,
+        fig8_gap9_micro,
+        fig9_10_l1_scaling,
+        fig11_resnet_mapping,
+        pod_roofline_summary,
+        table3_e2e,
+        table4_heterogeneity,
+        tpu_kernel_schedules,
+    )
+
+    benches = {
+        "fig7": fig7_diana_micro,
+        "fig8": fig8_gap9_micro,
+        "table3": table3_e2e,
+        "table4": table4_heterogeneity,
+        "fig9_10": fig9_10_l1_scaling,
+        "fig11": fig11_resnet_mapping,
+        "tpu_kernels": tpu_kernel_schedules,
+        "pod_roofline": pod_roofline_summary,
+    }
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            mod.run()
+        except Exception as e:  # keep the suite going, report at the end
+            failures += 1
+            print(f"{name},0.0,ERROR={type(e).__name__}:{e}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Table III: end-to-end MLPerf-Tiny deployment on DIANA + GAP9.
+
+Columns: predicted latency (ms) for plain-TVM (CPU fallback only) vs
+MATCH (all modules), plus the OoM deployability check that reproduces
+the MobileNet-on-DIANA entry.
+"""
+
+from __future__ import annotations
+
+from repro.cnn import fits_memory, mlperf_tiny_networks
+from repro.core import dispatch
+from repro.targets import make_diana_target, make_gap9_target
+
+from .common import emit, timed
+
+
+def run() -> list[str]:
+    rows = []
+    nets = mlperf_tiny_networks()
+    for tname, tgt, l2, pad, reserve in (
+        ("diana", make_diana_target(), 512 * 1024, 16, 128 * 1024),
+        ("gap9", make_gap9_target(), 3 * 512 * 1024, 1, 128 * 1024),
+    ):
+        for name, g in nets.items():
+            if not fits_memory(g, l2, pad_to=pad, runtime_reserve=reserve):
+                rows.append(emit(f"table3_{tname}_{name}", 0.0, "OoM (matches paper)"))
+                continue
+            mg, us = timed(dispatch, g, tgt)
+            cpu = dispatch(g, tgt.restricted([]))
+            rows.append(
+                emit(
+                    f"table3_{tname}_{name}",
+                    us,
+                    f"match_ms={mg.latency_s()*1e3:.3f};tvm_ms={cpu.latency_s()*1e3:.3f};"
+                    f"speedup={cpu.total_cycles()/mg.total_cycles():.1f}",
+                )
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

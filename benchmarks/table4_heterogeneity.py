@@ -1,0 +1,37 @@
+"""Paper Table IV: GAP9 heterogeneity ablation — CPU / Cluster+CPU /
+NE16+CPU / Full per network, showing the dispatcher's multi-module win.
+"""
+
+from __future__ import annotations
+
+from repro.cnn import mlperf_tiny_networks
+from repro.core import dispatch
+from repro.targets import make_gap9_target
+
+from .common import emit, timed
+
+
+def run() -> list[str]:
+    tgt = make_gap9_target()
+    variants = {
+        "cpu_only": tgt.restricted([]),
+        "cluster_cpu": tgt.restricted(["cluster"]),
+        "ne16_cpu": tgt.restricted(["ne16"]),
+        "full": tgt,
+    }
+    rows = []
+    for name, g in mlperf_tiny_networks().items():
+        lat = {}
+        us_total = 0.0
+        for vname, vt in variants.items():
+            mg, us = timed(dispatch, g, vt)
+            lat[vname] = mg.latency_s() * 1e3
+            us_total += us
+        derived = ";".join(f"{k}_ms={v:.3f}" for k, v in lat.items())
+        derived += f";full_speedup_vs_cpu={lat['cpu_only']/max(lat['full'],1e-9):.1f}"
+        rows.append(emit(f"table4_{name}", us_total, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

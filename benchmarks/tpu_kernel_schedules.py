@@ -1,0 +1,54 @@
+"""TPU adaptation: DSE-selected BlockSpecs + interpret-mode kernel timing.
+
+Two parts:
+1. the LOMA schedules chosen for representative LM kernel workloads on
+   the TPU v5e MatchTarget (tile sizes, predicted cycles) — the TPU
+   analogue of the paper's per-layer schedule dumps;
+2. wall-time of each Pallas kernel in interpret mode at small shapes vs
+   its jnp oracle (CPU-interpret timing is a correctness-path cost, NOT
+   TPU performance — the predicted cycles are the perf signal).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import emit, timed
+
+
+def run() -> list[str]:
+    rows = []
+    for r in ops.kernel_schedule_table():
+        blocks = "x".join(f"{k}={v}" for k, v in r["block"].items())
+        rows.append(
+            emit(
+                f"tpu_sched_{r['kernel']}_{'_'.join(str(v) for v in r['dims'].values())}",
+                0.0,
+                f"block[{blocks}];pred_cycles={r['predicted_cycles']:.3g}",
+            )
+        )
+
+    rng = np.random.default_rng(0)
+    # small-shape interpret-mode timings (correctness path)
+    a = jnp.asarray(rng.integers(-64, 64, (64, 128)), jnp.int8)
+    w = jnp.asarray(rng.integers(-64, 64, (128, 128)), jnp.int8)
+    mult = jnp.ones((128,), jnp.int32)
+    bias = jnp.zeros((128,), jnp.int32)
+    _, us = timed(lambda: ops.scheduled_matmul_requant(a, w, mult, bias).block_until_ready())
+    _, us_ref = timed(lambda: ref.matmul_requant_ref(a, w, mult, bias).block_until_ready())
+    rows.append(emit("tpu_kernel_matmul_requant_interp", us, f"ref_us={us_ref:.1f}"))
+
+    q = jnp.asarray(rng.normal(size=(1, 4, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    _, us = timed(lambda: ops.scheduled_flash_attention(q, k, v).block_until_ready())
+    _, us_ref = timed(lambda: ref.flash_attention_ref(q, k, v).block_until_ready())
+    rows.append(emit("tpu_kernel_flash_attention_interp", us, f"ref_us={us_ref:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,15 @@
+"""Batched serving example: continuous-batching engine over an SSM
+(attention-free => O(1) decode state).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "mamba2_1_3b", "--smoke", "--requests", "6", "--max-new", "10", "--slots", "3"])

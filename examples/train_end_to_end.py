@@ -1,0 +1,58 @@
+"""End-to-end driver (deliverable b): train a ~100M-param model for a few
+hundred steps on CPU with the full substrate — data pipeline, AdamW,
+checkpointing, preemption guard.
+
+  PYTHONPATH=src python examples/train_end_to_end.py [--steps 200]
+
+~100M params: qwen2.5-family geometry scaled to d_model=512, 8 layers,
+vocab 32k (~92M). Loss must drop visibly over the run.
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    import tempfile
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+    if not args.ckpt_dir:
+        # fresh dir by default: resuming a stale checkpoint past --steps
+        # would make this demo a no-op
+        args.ckpt_dir = tempfile.mkdtemp(prefix="repro_e2e_ckpt_")
+
+    # ~100M-param dense config via the CLI's smoke override + width bump:
+    # we register it inline for the example.
+    import repro.configs.qwen2_5_3b as q
+
+    big_smoke = q.CONFIG.replace(
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, d_ff=2048,
+        vocab=32768, remat="none", name="qwen2.5-100m",
+    )  # ~101M params; ~10 s/step on this 1-core container
+    q.SMOKE = big_smoke  # the driver resolves --smoke through this
+
+    print(f"params: {big_smoke.n_params()/1e6:.1f}M")
+    return train_main(
+        [
+            "--arch", "qwen2_5_3b", "--smoke",
+            "--steps", str(args.steps),
+            "--batch", "8", "--seq", "256",
+            "--lr", "1e-3",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+            "--log-every", "10",
+        ]
+    )
+
+
+if __name__ == "__main__":
+    res = main()
+    assert res["final_loss"] < res["first_loss"], res
+    print("loss decreased:", res)

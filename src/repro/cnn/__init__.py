@@ -1,0 +1,32 @@
+"""repro.cnn — the paper's workload domain.
+
+Graph builders for the four MLPerf-Tiny networks (paper Sec. VI-B) and
+the conv micro-benchmark sweeps (Sec. VI-A), plus a runnable jnp
+interpreter so the graphs execute end-to-end, not just schedule.
+"""
+
+from .analysis import fits_memory, network_memory, peak_activation_bytes, weight_bytes
+from .execute import execute_graph, init_graph_params
+from .nets import (
+    conv_block_graph,
+    dae_graph,
+    dscnn_graph,
+    mlperf_tiny_networks,
+    mobilenet_v1_graph,
+    resnet8_graph,
+)
+
+__all__ = [
+    "fits_memory",
+    "network_memory",
+    "peak_activation_bytes",
+    "weight_bytes",
+    "execute_graph",
+    "init_graph_params",
+    "conv_block_graph",
+    "dae_graph",
+    "dscnn_graph",
+    "mlperf_tiny_networks",
+    "mobilenet_v1_graph",
+    "resnet8_graph",
+]

@@ -1,0 +1,119 @@
+"""Runnable jnp execution of repro.core CNN graphs.
+
+The paper's generated C calls backend kernels; here the same graphs
+execute through jax.numpy so the framework is end-to-end runnable on any
+backend.  Integer inference is simulated in float32 with integer-valued
+tensors: conv/dense accumulate int8 x int8 products exactly, and
+``requant`` applies the paper's rewritten arithmetic f(x) = (x*M + B) >> S
+(Table II) via round+clip.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Graph, Node
+
+__all__ = ["init_graph_params", "execute_graph"]
+
+
+def _geom(n: Node, k: str, d: int = 1) -> int:
+    return int(n.attr(k, d) or d)
+
+
+def init_graph_params(graph: Graph, seed: int = 0) -> dict:
+    """Random int8-valued weights for every parametric node."""
+    rng = np.random.default_rng(seed)
+    params: dict[str, dict] = {}
+    for n in graph.nodes:
+        if n.op == "conv2d":
+            k, c, fy, fx = (_geom(n, a) for a in ("K", "C", "FY", "FX"))
+            params[n.name] = {"w": rng.integers(-4, 5, size=(fy, fx, c, k)).astype(np.float32)}
+        elif n.op == "dwconv2d":
+            c, fy, fx = (_geom(n, a) for a in ("C", "FY", "FX"))
+            # HWIO with feature_group_count=C: I=1, O=C
+            params[n.name] = {"w": rng.integers(-4, 5, size=(fy, fx, 1, c)).astype(np.float32)}
+        elif n.op == "dense":
+            k, c = _geom(n, "K"), _geom(n, "C")
+            params[n.name] = {"w": rng.integers(-4, 5, size=(k, c)).astype(np.float32)}
+        elif n.op == "bias_add":
+            k = _geom(n, "K", _geom(n, "C"))
+            params[n.name] = {"b": rng.integers(-16, 17, size=(k,)).astype(np.float32)}
+        elif n.op == "requant":
+            # (x * M + B) >> S with M=1, B=0, S=5: divide by 32, round, clip
+            params[n.name] = {"shift": np.float32(5.0)}
+    return params
+
+
+def _conv(x, w, stride):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _dwconv(x, w, stride):
+    c = x.shape[-1]
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def execute_graph(graph: Graph, params: dict, inputs: dict) -> dict:
+    """Interpret the graph; returns {output_name: array}."""
+    env: dict[str, jnp.ndarray] = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
+
+    for n in graph.nodes:
+        xs = [env[i] for i in n.inputs]
+        p = params.get(n.name, {})
+        if n.op == "conv2d":
+            env[n.name] = _conv(xs[0], jnp.asarray(p["w"]), _geom(n, "stride"))
+        elif n.op == "dwconv2d":
+            env[n.name] = _dwconv(xs[0], jnp.asarray(p["w"]), _geom(n, "stride"))
+        elif n.op == "dense":
+            x = xs[0]
+            x = x.reshape(x.shape[0], -1)  # flatten (B,1,1,C) heads
+            env[n.name] = x @ jnp.asarray(p["w"]).T
+        elif n.op == "bias_add":
+            env[n.name] = xs[0] + jnp.asarray(p["b"])
+        elif n.op == "requant":
+            shift = p.get("shift", 5.0)
+            y = jnp.round(xs[0] / (2.0**shift))
+            env[n.name] = jnp.clip(y, -128, 127)
+        elif n.op == "relu":
+            env[n.name] = jnp.maximum(xs[0], 0.0)
+        elif n.op == "add":
+            env[n.name] = xs[0] + xs[1]
+        elif n.op == "avgpool":
+            # global average pool over the spatial window (full extent in
+            # the MLPerf-Tiny heads), keep integer-valued semantics
+            env[n.name] = jnp.round(jnp.mean(xs[0], axis=(1, 2), keepdims=True))
+        elif n.op == "maxpool":
+            env[n.name] = jax.lax.reduce_window(
+                xs[0],
+                -jnp.inf,
+                jax.lax.max,
+                (1, _geom(n, "FY"), _geom(n, "FX"), 1),
+                (1, _geom(n, "FY"), _geom(n, "FX"), 1),
+                "VALID",
+            )
+        elif n.op in ("reshape", "identity"):
+            env[n.name] = xs[0]
+        elif n.op in ("mul", "div", "rshift", "clip"):
+            env[n.name] = xs[0]  # folded by transformations in real flows
+        else:
+            raise NotImplementedError(f"op {n.op} in {graph.name}")
+
+    return {o: env[o] for o in graph.outputs}

@@ -1,0 +1,165 @@
+"""Heterogeneous accelerator-aware dispatch (paper Sec. IV-B).
+
+For every graph segment, all execution modules whose pattern tables match
+are costed through the LOMA DSE; the module with the minimum predicted
+latency wins the segment.  Unmatched (or nowhere-feasible) segments fall
+back to the target's fallback module — the "un-matched -> TVM default on
+the main CPU" path of the paper.
+
+This is the piece missing from DORY/HTVM that the paper highlights: on
+GAP9 it lets the NE16 accelerator and the 8-core cluster be used *on the
+same network*, each where it is fastest (Table IV "Full" column).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from .graph import Graph, Node
+from .loma import ScheduleResult, search_schedule
+from .patterns import PatternMatch, default_workload, find_matches
+from .target import ExecutionModule, MatchTarget
+from .workload import Workload
+
+__all__ = ["MappedSegment", "MappedGraph", "dispatch"]
+
+
+@dataclass(frozen=True)
+class MappedSegment:
+    """A fused group of nodes mapped onto one execution module."""
+
+    nodes: tuple[Node, ...]
+    module: str
+    schedule: ScheduleResult | None  # None for zero-cost structural ops
+    workload: Workload | None
+    pattern: str = ""
+
+    @property
+    def cycles(self) -> float:
+        if self.schedule is None:
+            return 0.0
+        return self.schedule.latency_cycles
+
+    @property
+    def anchor(self) -> Node:
+        return self.nodes[0]
+
+
+@dataclass
+class MappedGraph:
+    """Dispatch result: full partitioning of a graph over a target."""
+
+    graph: Graph
+    target: MatchTarget
+    segments: list[MappedSegment]
+
+    def total_cycles(self) -> float:
+        return sum(s.cycles for s in self.segments)
+
+    def latency_s(self, frequency_hz: float | None = None) -> float:
+        f = frequency_hz or self.target.fallback.frequency_hz
+        return self.total_cycles() / f
+
+    def cycles_by_module(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for s in self.segments:
+            out[s.module] = out.get(s.module, 0.0) + s.cycles
+        return out
+
+    def module_of(self, node_name: str) -> str:
+        for s in self.segments:
+            if any(n.name == node_name for n in s.nodes):
+                return s.module
+        raise KeyError(node_name)
+
+    def macs_per_cycle(self) -> float:
+        macs = self.graph.total_macs()
+        cyc = self.total_cycles()
+        return macs / cyc if cyc > 0 else 0.0
+
+    def summary(self) -> str:
+        lines = [f"MappedGraph[{self.graph.name} on {self.target.name}]"]
+        for s in self.segments:
+            names = "+".join(n.name for n in s.nodes)
+            lines.append(
+                f"  {names:<40s} -> {s.module:<10s} {s.cycles:>14.0f} cyc"
+                + (f"  ({s.pattern})" if s.pattern else "")
+            )
+        lines.append(f"  TOTAL {self.total_cycles():.0f} cycles, {self.macs_per_cycle():.2f} MACs/cyc")
+        return "\n".join(lines)
+
+
+def _fallback_segment(
+    target: MatchTarget, nodes: tuple[Node, ...], budget: int
+) -> MappedSegment:
+    wl = default_workload(nodes[0]) if len(nodes) == 1 else None
+    if wl is None:
+        return MappedSegment(nodes, target.fallback.name, None, None, pattern="structural")
+    sched = search_schedule(wl, target.fallback, budget=budget)
+    if not sched.feasible:
+        # the fallback CPU must always execute: model as untiled streaming
+        from .cost_model import evaluate_mapping
+        from .loma import TemporalMapping
+
+        tiles = {l.name: 1 for l in wl.loops}
+        cost = evaluate_mapping(wl, tiles, tuple(wl.dim_names), target.fallback)
+        sched = ScheduleResult(wl.name, target.fallback.name, TemporalMapping(tiles, tuple(wl.dim_names)), cost, 1)
+    return MappedSegment(nodes, target.fallback.name, sched, wl, pattern="fallback")
+
+
+def dispatch(
+    graph: Graph,
+    target: MatchTarget,
+    *,
+    budget: int = 4000,
+    verbose: bool = False,
+) -> MappedGraph:
+    """Partition ``graph`` across ``target``'s execution modules.
+
+    Paper Sec. IV-B: iterate the pattern tables of every module; for nested
+    patterns keep the largest; for a pattern supported by several modules,
+    DSE each and keep the minimum-predicted-latency module; unmatched ->
+    fallback.
+    """
+    segments: list[MappedSegment] = []
+    consumed: set[str] = set()
+
+    for node in graph.nodes:
+        if node.name in consumed:
+            continue
+
+        # gather matches from every module's pattern table
+        per_module: list[tuple[ExecutionModule, PatternMatch]] = []
+        for module in target.modules:
+            for m in find_matches(graph, node, module.patterns):
+                per_module.append((module, m))
+
+        chosen: MappedSegment | None = None
+        if per_module:
+            # largest-match-first (fusion always convenient), then cost argmin
+            max_len = max(len(m.nodes) for _, m in per_module)
+            for length in range(max_len, 0, -1):
+                cands = [(mod, m) for mod, m in per_module if len(m.nodes) == length]
+                best: tuple[ExecutionModule, PatternMatch, ScheduleResult] | None = None
+                for mod, m in cands:
+                    wl = m.workload()
+                    sched = search_schedule(wl, mod, budget=budget)
+                    if not sched.feasible:
+                        continue
+                    if best is None or sched.latency_cycles < best[2].latency_cycles:
+                        best = (mod, m, sched)
+                if best is not None:
+                    mod, m, sched = best
+                    chosen = MappedSegment(m.nodes, mod.name, sched, m.workload(), pattern=m.pattern.name)
+                    break
+
+        if chosen is None:
+            chosen = _fallback_segment(target, (node,), budget)
+
+        segments.append(chosen)
+        consumed |= {n.name for n in chosen.nodes}
+        if verbose:
+            print(f"  dispatch {chosen.anchor.name} -> {chosen.module} ({chosen.cycles:.0f} cyc)")
+
+    return MappedGraph(graph, target, segments)

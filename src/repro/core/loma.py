@@ -1,0 +1,358 @@
+"""LOMA-style temporal-mapping DSE (paper Sec. IV-B.1, ref. [32]).
+
+LOMA enumerates valid, non-equivalent schedules from the **loop prime
+factors** of each dimension and allocates operands to the lowest non-full
+memory level.  Both hardware targets in this repo (MCU L2→L1 scratchpads
+and TPU HBM→VMEM) expose exactly two software-managed levels per operand,
+so the search specialises to:
+
+* an **inner tile** per loop dim (a divisor of the dim built from a subset
+  of its prime factors — the LPF split), resident at L1/VMEM, and
+* a permutation of the **outer** loops, which determines stationarity
+  (reload factors) and partial-sum spills.
+
+Uneven mappings (paper: "different tensors tiled in different memory
+levels") arise naturally when an operand's tile equals its full footprint.
+Double-buffering support is the ``+`` vs ``max`` combine in the cost model
+plus the 2x L1 footprint charge — both paper extensions to ZigZag.
+
+The search is exhaustive up to a candidate ``budget``; above it, tile
+candidates are subsampled deterministically, preferring spatial-unrolling
+aligned sizes (the MXU wants multiples of 128, DIANA of 16).
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Iterable, Mapping, Sequence
+
+from .cost_model import INFEASIBLE, CostBreakdown, evaluate_mapping
+from .target import ExecutionModule
+from .workload import Workload, prod
+
+__all__ = [
+    "TemporalMapping",
+    "ScheduleResult",
+    "prime_factors",
+    "divisors",
+    "tile_candidates",
+    "order_candidates",
+    "search_schedule",
+    "clear_schedule_cache",
+]
+
+
+def prime_factors(n: int) -> list[int]:
+    """Prime factorisation (multiset) of n — the LPF basis."""
+    out: list[int] = []
+    d = 2
+    while d * d <= n:
+        while n % d == 0:
+            out.append(d)
+            n //= d
+        d += 1
+    if n > 1:
+        out.append(n)
+    return out
+
+
+@lru_cache(maxsize=4096)
+def divisors(n: int) -> tuple[int, ...]:
+    """All divisors of n (products of prime-factor subsets), sorted."""
+    pf = prime_factors(n)
+    divs = {1}
+    for p in pf:
+        divs |= {d * p for d in divs}
+    return tuple(sorted(divs))
+
+
+@dataclass(frozen=True)
+class TemporalMapping:
+    """One schedule candidate: L1 tile sizes + outer loop order."""
+
+    tiles: Mapping[str, int]
+    outer_order: tuple[str, ...]  # outermost first
+
+    def describe(self, workload: Workload) -> str:
+        full = workload.dim_sizes
+        inner = " ".join(f"{d}={self.tiles.get(d, 1)}" for d in full)
+        outer = ">".join(
+            f"{d}/{math.ceil(full[d] / self.tiles.get(d, 1))}"
+            for d in self.outer_order
+            if math.ceil(full[d] / self.tiles.get(d, 1)) > 1
+        )
+        return f"tile[{inner}] outer[{outer or 'none'}]"
+
+
+@dataclass(frozen=True)
+class ScheduleResult:
+    """Winning schedule for one (workload, module)."""
+
+    workload_name: str
+    module_name: str
+    mapping: TemporalMapping
+    cost: CostBreakdown
+    candidates_evaluated: int = 0
+
+    @property
+    def latency_cycles(self) -> float:
+        return self.cost.latency_cycles
+
+    @property
+    def feasible(self) -> bool:
+        return self.cost.feasible
+
+    def macs_per_cycle(self, workload: Workload) -> float:
+        return self.cost.with_macs(workload.total_macs())
+
+
+# ---------------------------------------------------------------------------
+# Candidate generation
+# ---------------------------------------------------------------------------
+
+
+def tile_candidates(
+    workload: Workload,
+    module: ExecutionModule,
+    max_per_dim: int = 12,
+) -> dict[str, list[int]]:
+    """Per-dim inner-tile size candidates.
+
+    Divisors of the dim (LPF subsets) plus spatial-unrolling-aligned sizes
+    (multiples of the PE/MXU count, which divide nothing but maximise
+    utilization through ceil-padding), deterministically thinned to
+    ``max_per_dim``.
+    """
+    su = module.spatial_for(workload)
+    sequential = set(workload.attrs.get("sequential", ()))
+    out: dict[str, list[int]] = {}
+    for loop in workload.loops:
+        n = loop.size
+        cands = set(divisors(n))
+        unroll = su.dims.get(loop.name)
+        if unroll:
+            m = unroll
+            while m < n:
+                cands.add(m)
+                m *= 2
+            cands.add(min(unroll, n))
+        cands.add(n)
+        if loop.name in sequential:
+            # recurrence dims: tile = chunk size; any chunk works but the
+            # op processes chunks in order — candidates unchanged.
+            pass
+        ordered = sorted(cands)
+        if len(ordered) > max_per_dim:
+            # keep extremes + geometric subsample, preferring aligned sizes
+            keep = {ordered[0], ordered[-1]}
+            if unroll:
+                keep |= {c for c in ordered if c % unroll == 0}
+            step = max(1, len(ordered) // max_per_dim)
+            keep |= set(ordered[::step])
+            ordered = sorted(keep)
+            if len(ordered) > max_per_dim:
+                # final thinning, keep largest (most reuse) biased sample
+                ordered = sorted(set(ordered[:2] + ordered[-(max_per_dim - 2):]))
+        out[loop.name] = ordered
+    return out
+
+
+def order_candidates(workload: Workload, max_orders: int = 64) -> list[tuple[str, ...]]:
+    """Outer-loop order candidates (outermost first).
+
+    Full permutations when small; otherwise canonical stationarity orders
+    (each operand's relevant dims innermost = that operand stationary) plus
+    a deterministic sample.
+    """
+    dims = [l.name for l in workload.loops]
+    if len(dims) <= 4:
+        perms = list(itertools.permutations(dims))
+    else:
+        perms = []
+        # canonical orders: rotate each operand's dims to the inner slots
+        for op in workload.operands:
+            rel = [d for d in dims if d in op.dims]
+            irr = [d for d in dims if d not in op.dims]
+            perms.append(tuple(irr + rel))  # op-stationary-ish
+            perms.append(tuple(rel + irr))  # op-streaming
+        # reduction-outer and reduction-inner variants
+        red = [l.name for l in workload.loops if l.kind == "reduction"]
+        sp = [l.name for l in workload.loops if l.kind != "reduction"]
+        perms.append(tuple(red + sp))
+        perms.append(tuple(sp + red))
+        for r in range(1, min(len(dims), 4)):
+            perms.append(tuple(dims[r:] + dims[:r]))
+        seen = set()
+        uniq = []
+        for p in perms:
+            if p not in seen:
+                seen.add(p)
+                uniq.append(p)
+        perms = uniq
+    if len(perms) > max_orders:
+        step = max(1, len(perms) // max_orders)
+        perms = perms[::step][:max_orders]
+    return perms
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+
+_SCHEDULE_CACHE: dict[tuple, ScheduleResult] = {}
+
+
+def clear_schedule_cache() -> None:
+    _SCHEDULE_CACHE.clear()
+
+
+def _workload_key(workload: Workload, module: ExecutionModule) -> tuple:
+    return (
+        workload.name,
+        workload.op_type,
+        tuple((l.name, l.size, l.kind) for l in workload.loops),
+        tuple((o.name, o.elem_bytes, o.dims) for o in workload.operands),
+        module.name,
+        tuple((m.name, m.size_bytes, m.bandwidth, m.chunk_overhead) for m in module.memories),
+        module.async_dma,
+        module.double_buffer,
+    )
+
+
+def search_schedule(
+    workload: Workload,
+    module: ExecutionModule,
+    *,
+    budget: int = 4000,
+    max_per_dim: int = 12,
+    max_orders: int = 64,
+    use_cache: bool = True,
+) -> ScheduleResult:
+    """Find the best temporal mapping of ``workload`` on ``module``.
+
+    Returns an infeasible :class:`ScheduleResult` when no tile fits the
+    module's L1 (the dispatcher then falls back — paper: offload to CPU).
+    """
+    key = _workload_key(workload, module)
+    if use_cache and key in _SCHEDULE_CACHE:
+        return _SCHEDULE_CACHE[key]
+
+    if not module.supports(workload):
+        res = ScheduleResult(workload.name, module.name, TemporalMapping({}, ()), INFEASIBLE, 0)
+        if use_cache:
+            _SCHEDULE_CACHE[key] = res
+        return res
+
+    cands = tile_candidates(workload, module, max_per_dim=max_per_dim)
+    orders = order_candidates(workload, max_orders=max_orders)
+    dims = [l.name for l in workload.loops]
+
+    state = _SearchState(workload, module, orders, budget)
+
+    total_combos = prod(len(cands[d]) for d in dims)
+    if total_combos * max(1, len(orders)) <= budget:
+        # exhaustive enumeration (small workloads, unit tests)
+        for combo in itertools.product(*(cands[d] for d in dims)):
+            state.try_tiles(dict(zip(dims, combo)))
+    else:
+        # greedy feasible anchor + coordinate descent (large workloads)
+        idx = {d: len(cands[d]) - 1 for d in dims}  # start at max tiles
+        tiles = {d: cands[d][idx[d]] for d in dims}
+        guard = 0
+        while not state.try_tiles(tiles) and guard < 10_000:
+            guard += 1
+            # shrink the dim with the largest current tile that can shrink
+            shrinkable = [d for d in dims if idx[d] > 0]
+            if not shrinkable:
+                break
+            d = max(shrinkable, key=lambda d: cands[d][idx[d]])
+            idx[d] -= 1
+            tiles[d] = cands[d][idx[d]]
+        # coordinate descent around the anchor (or around max if infeasible)
+        improved = True
+        while improved and state.n_eval < budget:
+            improved = False
+            for d in dims:
+                base = dict(state.best_tiles or tiles)
+                for v in cands[d]:
+                    if v == base.get(d):
+                        continue
+                    trial = dict(base)
+                    trial[d] = v
+                    before = state.best_latency
+                    state.try_tiles(trial)
+                    if state.best_latency < before:
+                        improved = True
+                    if state.n_eval >= budget:
+                        break
+                if state.n_eval >= budget:
+                    break
+
+    best = state.result()
+    if use_cache:
+        _SCHEDULE_CACHE[key] = best
+    return best
+
+
+class _SearchState:
+    """Tracks the incumbent during schedule search."""
+
+    def __init__(self, workload: Workload, module: ExecutionModule, orders, budget: int):
+        self.workload = workload
+        self.module = module
+        self.orders = orders
+        self.budget = budget
+        self.n_eval = 0
+        self.best_cost: CostBreakdown | None = None
+        self.best_tiles: dict | None = None
+        self.best_order: tuple[str, ...] | None = None
+        self._seen: set[tuple] = set()
+        self._feas_cache: dict[tuple, bool] = {}
+
+    @property
+    def best_latency(self) -> float:
+        return self.best_cost.latency_cycles if self.best_cost else math.inf
+
+    def try_tiles(self, tiles: Mapping[str, int]) -> bool:
+        """Evaluate tiles across all orders; returns feasibility."""
+        sig = tuple(sorted(tiles.items()))
+        if sig in self._seen:
+            return self.best_tiles == dict(tiles) or self._was_feasible(sig)
+        self._seen.add(sig)
+        first = evaluate_mapping(self.workload, tiles, self.orders[0], self.module)
+        self.n_eval += 1
+        if not first.feasible:
+            self._feas_cache[sig] = False
+            return False
+        self._feas_cache[sig] = True
+        local = (self.orders[0], first)
+        for order in self.orders[1:]:
+            c = evaluate_mapping(self.workload, tiles, order, self.module)
+            self.n_eval += 1
+            if c.latency_cycles < local[1].latency_cycles:
+                local = (order, c)
+        order, cost = local
+        if self.best_cost is None or cost.latency_cycles < self.best_cost.latency_cycles:
+            self.best_cost = cost
+            self.best_tiles = dict(tiles)
+            self.best_order = tuple(order)
+        return True
+
+    def _was_feasible(self, sig) -> bool:
+        return self._feas_cache.get(sig, False)
+
+    def result(self) -> ScheduleResult:
+        if self.best_cost is None:
+            return ScheduleResult(
+                self.workload.name, self.module.name, TemporalMapping({}, ()), INFEASIBLE, self.n_eval
+            )
+        return ScheduleResult(
+            self.workload.name,
+            self.module.name,
+            TemporalMapping(self.best_tiles, self.best_order),
+            self.best_cost,
+            self.n_eval,
+        )

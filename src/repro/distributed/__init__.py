@@ -1,0 +1,25 @@
+"""repro.distributed — pod-scale distribution substrate.
+
+* sharding:   logical-axis rules -> PartitionSpec/NamedSharding, the
+              activation/parameter annotation API used by the models
+* autoshard:  MATCH-style cost-model search over sharding strategies
+* collectives: overlap helpers + gradient compression
+"""
+
+from .sharding import (
+    ShardingRules,
+    constrain,
+    current_rules,
+    logical_to_spec,
+    param_shardings,
+    use_rules,
+)
+
+__all__ = [
+    "ShardingRules",
+    "constrain",
+    "current_rules",
+    "logical_to_spec",
+    "param_shardings",
+    "use_rules",
+]

@@ -1,0 +1,58 @@
+"""Gradient compression: int8 quantization with per-tensor scales.
+
+Distributed-optimization trick for DP-collective-bound training: the
+gradient all-reduce moves int8 instead of bf16/fp32 (4x fewer bytes on
+the wire).  Error feedback (the residual buffer) keeps convergence; the
+simple stateless variant here quantizes/dequantizes around the reduce
+and is validated for bounded error in tests.
+
+With GSPMD the reduce is implicit, so the quantize/dequantize pair
+brackets the gradient tree; on an explicit shard_map DP loop the int8
+tensors are what crosses the wire.  The analytical benefit is costed in
+repro.distributed.autoshard (collective term / 4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize", "dequantize", "quantize_tree", "dequantize_tree", "error_feedback_update"]
+
+
+def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_tree(tree):
+    return jax.tree.map(quantize, tree)
+
+
+def dequantize_tree(qtree):
+    return jax.tree.map(
+        lambda t: dequantize(*t), qtree, is_leaf=lambda t: isinstance(t, tuple)
+    )
+
+
+def error_feedback_update(grads, residual):
+    """Classic EF-SGD: compress (grad + residual), carry the error.
+
+    Returns (decompressed, new_residual)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = quantize(x)
+        d = dequantize(q, s)
+        return d, x - d
+
+    out = jax.tree.map(one, grads, residual)
+    dec = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return dec, res

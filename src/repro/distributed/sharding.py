@@ -1,0 +1,122 @@
+"""Logical-axis sharding rules (the pod-level "API table" of MATCH).
+
+Models annotate tensors with *logical* axis names ("batch", "seq",
+"embed", "heads", "ffn", "vocab", "experts", ...).  A
+:class:`ShardingRules` table maps logical names to mesh axes — this is
+the declarative, per-target customization point, mirroring how the paper
+keeps hardware specifics in small per-SoC model files instead of compiler
+passes.  The autoshard search (repro.distributed.autoshard) *produces*
+these tables; the dry-run and trainer *consume* them.
+
+Usage:
+    rules = ShardingRules(mesh, {"batch": ("pod", "data"), "ffn": "model", ...})
+    with use_rules(rules):
+        y = constrain(x, "batch", "seq", None)   # inside jit
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules",
+    "use_rules",
+    "current_rules",
+    "constrain",
+    "logical_to_spec",
+    "param_shardings",
+]
+
+
+@dataclass
+class ShardingRules:
+    """mesh + logical->mesh-axis table.
+
+    Values may be a mesh-axis name, a tuple of mesh axes (e.g. batch over
+    ("pod", "data")), or None (replicated).
+    """
+
+    mesh: Mesh | None
+    table: dict[str, Any] = field(default_factory=dict)
+
+    def spec_for(self, logical_axes: Sequence[str | None]) -> P:
+        parts = []
+        used: set[str] = set()
+        for ax in logical_axes:
+            if ax is None:
+                parts.append(None)
+                continue
+            mapped = self.table.get(ax)
+            if mapped is None:
+                parts.append(None)
+                continue
+            axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+            # a mesh axis can shard only one tensor dim; later wins -> None
+            axes = tuple(a for a in axes if a not in used)
+            used |= set(axes)
+            if not axes:
+                parts.append(None)
+            elif len(axes) == 1:
+                parts.append(axes[0])
+            else:
+                parts.append(axes)
+        return P(*parts)
+
+    def sharding_for(self, logical_axes: Sequence[str | None]) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec_for(logical_axes))
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def logical_to_spec(*logical_axes: str | None) -> P:
+    rules = current_rules()
+    if rules is None:
+        return P()
+    return rules.spec_for(logical_axes)
+
+
+def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without rules.
+
+    Annotations are what lets GSPMD propagate the autoshard decisions —
+    the pod-level analogue of the paper's template "memory APIs".
+    """
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    if x.ndim != len(logical_axes):
+        raise ValueError(f"rank {x.ndim} vs {logical_axes}")
+    sharding = rules.sharding_for(logical_axes)
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def param_shardings(param_axes, rules: ShardingRules):
+    """Map a pytree of logical-axes tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: rules.sharding_for(axes),
+        param_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x),
+    )

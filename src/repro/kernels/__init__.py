@@ -1,0 +1,23 @@
+"""repro.kernels — Pallas TPU kernels for the compute hot-spots.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+with its jnp oracle in ref.py and the DSE-scheduled jit wrapper in ops.py.
+Validated in interpret mode on CPU; the BlockSpecs target TPU v5e.
+"""
+
+from . import ops, ref
+from .flash_attention import flash_attention
+from .matmul_requant import matmul_requant
+from .moe_gmm import moe_gmm
+from .rglru_scan import rglru_scan
+from .ssd_scan import ssd_scan
+
+__all__ = [
+    "ops",
+    "ref",
+    "flash_attention",
+    "matmul_requant",
+    "moe_gmm",
+    "rglru_scan",
+    "ssd_scan",
+]

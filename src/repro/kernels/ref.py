@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "matmul_requant_ref",
+    "flash_attention_ref",
+    "moe_gmm_ref",
+    "rglru_scan_ref",
+    "ssd_scan_ref",
+]
+
+
+def matmul_requant_ref(a, w, mult, bias, *, shift: int = 8, relu: bool = False):
+    """(x*M + B) >> S, clip int8 — the paper's requant arithmetic."""
+    acc = jnp.dot(a.astype(jnp.int32), w.astype(jnp.int32))
+    y = acc * mult[None, :].astype(jnp.int32) + bias[None, :].astype(jnp.int32)
+    y = jax.lax.shift_right_arithmetic(y, shift)
+    if relu:
+        y = jnp.maximum(y, 0)
+    return jnp.clip(y, -128, 127).astype(jnp.int8)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """Direct softmax attention with GQA; fp32 math."""
+    B, H, Sq, D = q.shape
+    _, KV, Sk, _ = k.shape
+    g = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, g, Sq, D) / math.sqrt(D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def moe_gmm_ref(x, w):
+    return jnp.einsum(
+        "ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def rglru_scan_ref(a, b):
+    """Sequential scan oracle (fp32)."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    h0 = jnp.zeros(af.shape[::2], jnp.float32)  # (B, W)
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(af, 1, 0), jnp.moveaxis(bf, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def ssd_scan_ref(xb, a, Bm, Cm):
+    """Sequential state-space oracle: h_t = e^{a_t} h_{t-1} + xb_t B_t^T."""
+    B, H, T, P = xb.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xbt, at, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        h = jnp.exp(at)[..., None, None] * h + jnp.einsum("bhp,bn->bhpn", xbt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (
+        jnp.moveaxis(xb.astype(jnp.float32), 2, 0),
+        jnp.moveaxis(a.astype(jnp.float32), 2, 0),
+        jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Cm.astype(jnp.float32), 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 2)  # (B, H, T, P)

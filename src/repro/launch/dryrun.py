@@ -1,0 +1,319 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every runnable (architecture x input-shape) cell, on the single-pod
+(16,16) and multi-pod (2,16,16) production meshes:
+
+  with mesh:
+      lowered  = jax.jit(step_fn, ...).lower(*input_specs(arch, shape))
+      compiled = lowered.compile()
+      compiled.memory_analysis() / compiled.cost_analysis()
+
+Success proves the sharding configuration is coherent; the JSON records
+feed EXPERIMENTS.md §Dry-run and §Roofline.  The 512 CPU "devices" exist
+only inside this entry point (the env var above precedes every import).
+
+Usage:
+  python -m repro.launch.dryrun --arch dbrx_132b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--resume]      # full sweep
+"""
+
+import argparse
+import gc
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, SHAPES, cell_applicable, get_config
+from repro.distributed.autoshard import best_rules, predict_cell
+from repro.distributed.sharding import use_rules
+from repro.launch.mesh import make_production_mesh
+from repro.models import LM
+from repro.models.layers import spec_shapes
+from repro.training import OptConfig, make_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2, "f8e4m3": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?(\w+)\[([0-9,]*)\][^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?!-done)"  # async start/done pairs: count the start only
+)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-tensor bytes of every collective op in optimized HLO."""
+    per_kind: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.groups()
+        if kind.endswith("-start"):
+            kind = kind[: -len("-start")]
+        eb = _DTYPE_BYTES.get(dtype, 4)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        per_kind[kind] = per_kind.get(kind, 0.0) + n * eb
+        count[kind] = count.get(kind, 0) + 1
+    return {"bytes_by_kind": per_kind, "count_by_kind": count, "total_bytes": sum(per_kind.values())}
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, rules, axes):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=rules.sharding_for(axes))
+
+
+def batch_specs(cfg, cell, rules):
+    B, S = cell.global_batch, cell.seq_len
+    ba = ("batch",)
+    if cfg.frontend_stub:
+        return {
+            "embeds": _sds((B, S, cfg.d_model), cfg.dtype, rules, ("batch", "seq", None)),
+            "labels": _sds((B, S), "int32", rules, ("batch", "seq")),
+        }
+    return {
+        "tokens": _sds((B, S), "int32", rules, ("batch", "seq")),
+        "labels": _sds((B, S), "int32", rules, ("batch", "seq")),
+    }
+
+
+def cache_specs(model: LM, batch: int, max_len: int, rules):
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    axes = model.cache_axes()
+    return jax.tree.map(
+        lambda s, a: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rules.sharding_for(a)),
+        shapes,
+        axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct) or (isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)),
+    )
+
+
+def opt_state_specs(param_specs):
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32, sharding=s.sharding)
+    return {
+        "m": jax.tree.map(f32, param_specs),
+        "v": jax.tree.map(f32, param_specs),
+        "master": jax.tree.map(f32, param_specs),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_cell(
+    arch: str,
+    shape: str,
+    mesh,
+    strategy: str | None = None,
+    depth_override: int | None = None,
+    remat_override: str | None = None,
+    overrides: dict | None = None,
+):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if depth_override is not None:
+        # roofline depth-extrapolation protocol: XLA cost_analysis counts
+        # while-loop bodies once, so per-layer costs come from unrolled
+        # depth-p vs depth-2p lowerings (p = block pattern period).
+        cfg = cfg.replace(n_layers=depth_override, scan_layers=False)
+    if remat_override is not None:
+        cfg = cfg.replace(remat=remat_override)
+    cell = SHAPES[shape]
+    if strategy is None:
+        sname, rules, cost = best_rules(
+            cfg, mesh, global_batch=cell.global_batch, seq=cell.seq_len, kind=cell.kind
+        )
+    else:
+        from repro.distributed.autoshard import candidate_rules, _strategy_cost
+
+        cands = candidate_rules(cfg, mesh, global_batch=cell.global_batch, seq=cell.seq_len)
+        sname, rules = strategy, cands[strategy]
+        cost = _strategy_cost(strategy, cfg, rules, global_batch=cell.global_batch, seq=cell.seq_len, kind=cell.kind)
+
+    model = LM(cfg)
+    with use_rules(rules):
+        pspecs = spec_shapes(model.param_specs())
+
+        if cell.kind == "train":
+            step = make_train_step(model, OptConfig())
+            args = (pspecs, opt_state_specs(pspecs), batch_specs(cfg, cell, rules))
+            fn = jax.jit(step, donate_argnums=(0, 1))
+        elif cell.kind == "prefill":
+            if not cfg.decoder:  # encoder-only: "prefill" = full encode
+                fn = jax.jit(lambda p, b: model.forward(p, b.get("tokens"), embeds=b.get("embeds"))[0])
+                args = (pspecs, batch_specs(cfg, cell, rules))
+            else:
+                fn = jax.jit(lambda p, t: model.prefill(p, t))
+                args = (
+                    pspecs,
+                    _sds((cell.global_batch, cell.seq_len), "int32", rules, ("batch", "seq")),
+                )
+        else:  # decode: one new token against a seq_len cache
+            cspecs = cache_specs(model, cell.global_batch, cell.seq_len, rules)
+            fn = jax.jit(model.decode_step, donate_argnums=(1,))
+            args = (
+                pspecs,
+                cspecs,
+                _sds((cell.global_batch,), "int32", rules, ("batch",)),
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+    return fn, args, rules, sname, cost, cfg, cell
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    mesh_kind: str,
+    strategy: str | None = None,
+    depth_override: int | None = None,
+    remat_override: str | None = None,
+    overrides: dict | None = None,
+) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    fn, args, rules, sname, cost, cfg, cell = build_cell(
+        arch, shape, mesh, strategy, depth_override, remat_override, overrides
+    )
+    with use_rules(rules), mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {
+                "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_size_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:  # CPU backend may not implement it
+            mem_d = {"error": str(e)}
+        try:
+            costd = compiled.cost_analysis()
+            cost_d = {k: float(v) for k, v in costd.items() if isinstance(v, (int, float))} if costd else {}
+        except Exception as e:
+            cost_d = {"error": str(e)}
+        hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo)
+
+    n_chips = mesh.devices.size
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "chips": int(n_chips),
+        "n_layers": cfg.n_layers,
+        "depth_override": depth_override,
+        "remat": cfg.remat,
+        "strategy": sname,
+        "rules": {k: v for k, v in rules.table.items()},
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_d,
+        "cost_analysis_flops": cost_d.get("flops"),
+        "cost_analysis_bytes": cost_d.get("bytes accessed"),
+        "cost_analysis": cost_d,
+        "collectives": coll,
+        "hlo_bytes": len(hlo),
+        "model_params": cfg.n_params(),
+        "model_active_params": cfg.n_active_params(),
+        "tokens": cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1),
+        "kind": cell.kind,
+        "predicted": {
+            "strategy_cost": {
+                "compute_s": cost.compute_s,
+                "memory_s": cost.memory_s,
+                "collective_s": cost.collective_s,
+                "bound": cost.bound,
+            },
+            "candidates": predict_cell(
+                get_config(arch), mesh, global_batch=cell.global_batch, seq=cell.seq_len, kind=cell.kind
+            ),
+        },
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--strategy", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+
+    cells: list[tuple[str, str, str]] = []
+    if args.all:
+        for arch in ALL_ARCHS:
+            cfg = get_config(arch)
+            for shape in SHAPES:
+                ok, why = cell_applicable(cfg, shape)
+                if not ok:
+                    skip = {"arch": arch, "shape": shape, "status": "skip", "reason": why}
+                    for mesh in ("single", "multi"):
+                        p = OUT_DIR / f"{arch}__{shape}__{mesh}.json"
+                        p.write_text(json.dumps({**skip, "mesh": mesh}, indent=1))
+                    continue
+                cells.append((arch, shape, "single"))
+                cells.append((arch, shape, "multi"))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    for arch, shape, mesh in cells:
+        tag = f"__{args.tag}" if args.tag else ""
+        out = OUT_DIR / f"{arch}__{shape}__{mesh}{tag}.json"
+        if args.resume and out.exists() and json.loads(out.read_text()).get("status") == "ok":
+            print(f"[skip] {out.name}")
+            continue
+        print(f"[cell] {arch} x {shape} x {mesh} ...", flush=True)
+        t0 = time.time()
+        try:
+            rec = run_cell(arch, shape, mesh, args.strategy)
+            print(
+                f"  ok in {time.time()-t0:.1f}s  flops={rec['cost_analysis_flops']}"
+                f" coll={rec['collectives']['total_bytes']:.3g}B strat={rec['strategy']}",
+                flush=True,
+            )
+        except Exception as e:
+            rec = {
+                "arch": arch, "shape": shape, "mesh": mesh, "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+            print(f"  ERROR {type(e).__name__}: {str(e)[:200]}", flush=True)
+        out.write_text(json.dumps(rec, indent=1, default=str))
+        jax.clear_caches()
+        gc.collect()
+
+
+if __name__ == "__main__":
+    main()

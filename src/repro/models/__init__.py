@@ -1,0 +1,6 @@
+"""repro.models — LM stack for the ten assigned architectures."""
+
+from .config import ModelConfig
+from .transformer import LM, StackSpec
+
+__all__ = ["ModelConfig", "LM", "StackSpec"]

@@ -1,0 +1,141 @@
+"""Common layers: norms, MLPs, embeddings — pure-JAX, sharding-annotated.
+
+Parameters are plain pytrees built from :class:`ParamSpec`s; every spec
+carries *logical* sharding axes so the same model code runs on 1 CPU
+device (rules=None) and on the 512-chip production mesh (rules from the
+autoshard search).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+
+__all__ = [
+    "ParamSpec",
+    "init_from_specs",
+    "spec_shapes",
+    "rmsnorm",
+    "layernorm",
+    "mlp",
+    "mlp_params",
+    "embed_params",
+    "gelu",
+]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical sharding axes
+    dtype: str = "bfloat16"
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_shapes(specs):
+    """pytree of ParamSpec -> pytree of jax.ShapeDtypeStruct (+sharding)."""
+    from repro.distributed.sharding import current_rules
+
+    rules = current_rules()
+
+    def mk(s: ParamSpec):
+        sharding = rules.sharding_for(s.axes) if rules is not None else None
+        return jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype), sharding=sharding)
+
+    return jax.tree.map(mk, specs, is_leaf=_is_spec)
+
+
+def init_from_specs(rng: jax.Array, specs):
+    """Materialize parameters (smoke tests / real training)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(rng, len(leaves))
+
+    def mk(key, s: ParamSpec):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        fan_in = s.shape[0] if len(s.shape) > 1 else max(s.shape[0], 1)
+        std = s.scale / np.sqrt(fan_in)
+        return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(s.dtype)
+
+    return jax.tree.unflatten(treedef, [mk(k, s) for k, s in zip(keys, leaves)])
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN): swiglu / geglu / gelu
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(d_model: int, d_ff: int, activation: str, dtype: str) -> dict:
+    if activation in ("swiglu", "geglu"):
+        return {
+            "wi_gate": ParamSpec((d_model, d_ff), ("embed", "ffn"), dtype),
+            "wi_up": ParamSpec((d_model, d_ff), ("embed", "ffn"), dtype),
+            "wo": ParamSpec((d_ff, d_model), ("ffn", "embed"), dtype),
+        }
+    return {
+        "wi": ParamSpec((d_model, d_ff), ("embed", "ffn"), dtype),
+        "wo": ParamSpec((d_ff, d_model), ("ffn", "embed"), dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array, activation: str) -> jax.Array:
+    """x: (B, S, D). TP: d_ff sharded on "ffn"; output needs an all-reduce
+    which GSPMD inserts from the contraction over the sharded dim."""
+    if activation in ("swiglu", "geglu"):
+        g = x @ params["wi_gate"]
+        u = x @ params["wi_up"]
+        g = constrain(g, "batch", "seq", "ffn")
+        act = jax.nn.silu(g) if activation == "swiglu" else gelu(g)
+        h = act * u
+        y = h @ params["wo"]
+    else:
+        h = gelu(x @ params["wi"])
+        h = constrain(h, "batch", "seq", "ffn")
+        y = h @ params["wo"]
+    return constrain(y, "batch", "seq", None)
+
+
+def embed_params(vocab: int, d_model: int, dtype: str) -> ParamSpec:
+    return ParamSpec((vocab, d_model), ("vocab", "embed"), dtype, scale=1.0)

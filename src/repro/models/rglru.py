@@ -1,0 +1,126 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * softplus(Lambda) * r_t),  r_t/i_t = sigmoid(gates)
+
+Sub-quadratic in sequence length: training/prefill use
+``jax.lax.associative_scan`` over T (log-depth, TPU-friendly); decode is
+an O(1) state update.  The Pallas kernel in repro.kernels.rglru_scan
+implements the same recurrence with chunked state passing; this module
+is its oracle.
+
+Simplification vs. Griffin: the r/i gates are per-channel (diagonal)
+rather than dense block-diagonal projections — recorded in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec, gelu
+
+__all__ = ["rglru_params", "rglru_block", "rglru_decode_step", "rglru_scan_ref"]
+
+_C = 8.0  # Griffin's fixed scaling constant
+
+
+def rglru_params(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    cw = cfg.conv1d_width
+    return {
+        "wx": ParamSpec((d, w), ("embed", "ffn"), cfg.dtype),  # recurrent branch in
+        "wg": ParamSpec((d, w), ("embed", "ffn"), cfg.dtype),  # gate branch in
+        "wo": ParamSpec((w, d), ("ffn", "embed"), cfg.dtype),
+        "conv_w": ParamSpec((cw, w), (None, "ffn"), cfg.dtype, scale=0.5),
+        "lam": ParamSpec((w,), ("ffn",), "float32", init="ones", scale=1.0),
+        "gate_a_w": ParamSpec((w,), ("ffn",), "float32", init="zeros"),
+        "gate_a_b": ParamSpec((w,), ("ffn",), "float32", init="zeros"),
+        "gate_i_w": ParamSpec((w,), ("ffn",), "float32", init="zeros"),
+        "gate_i_b": ParamSpec((w,), ("ffn",), "float32", init="zeros"),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv over T.  x (B,T,W), w (CW,W).
+    Returns (y, new_state) where state carries the last CW-1 inputs."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, T+cw-1, W)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(cw))
+    new_state = xp[:, -(cw - 1) :, :] if cw > 1 else jnp.zeros_like(pad)
+    return y, new_state
+
+
+def _gates(params: dict, xr: jax.Array):
+    """a_t (log-space) and scaled input for the recurrence; fp32."""
+    x32 = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 * params["gate_a_w"] + params["gate_a_b"])
+    i = jax.nn.sigmoid(x32 * params["gate_i_w"] + params["gate_i_b"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r  # (B,T,W) <= 0
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i * x32)
+    return a, b
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array | None = None) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis 1 (T)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(
+    params: dict, x: jax.Array, cfg: ModelConfig, *, return_state: bool = False
+):
+    """Full Griffin recurrent block: (B,T,D) -> (B,T,D) [, final state]."""
+    xr = x @ params["wx"]
+    xg = x @ params["wg"]
+    xr = constrain(xr, "batch", "seq", "ffn")
+    xr, conv_state = _causal_conv1d(xr, params["conv_w"])
+    a, b = _gates(params, xr)
+    h = rglru_scan_ref(a, b)
+    y = (gelu(xg).astype(jnp.float32) * h).astype(x.dtype)
+    y = y @ params["wo"]
+    y = constrain(y, "batch", "seq", None)
+    if return_state:
+        return y, {"h": h[:, -1], "conv": conv_state}
+    return y
+
+
+def rglru_decode_step(
+    params: dict,
+    x: jax.Array,  # (B, 1, D)
+    state: dict,  # {"h": (B,W), "conv": (B,CW-1,W)}
+    cfg: ModelConfig,
+) -> tuple[jax.Array, dict]:
+    xr = x @ params["wx"]
+    xg = x @ params["wg"]
+    xr, conv_state = _causal_conv1d(xr, params["conv_w"], state["conv"])
+    a, b = _gates(params, xr)  # (B,1,W)
+    h = a[:, 0] * state["h"] + b[:, 0]  # (B,W)
+    y = (gelu(xg[:, 0]).astype(jnp.float32) * h).astype(x.dtype)
+    y = (y @ params["wo"])[:, None, :]
+    return y, {"h": h, "conv": conv_state}
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), jnp.dtype(cfg.dtype)),
+    }

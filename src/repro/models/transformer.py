@@ -1,0 +1,500 @@
+"""Composable LM: embeds + scanned block stacks + heads + caches.
+
+One model class serves all ten assigned architectures; the block mix is
+driven by ``ModelConfig.block_types``:
+
+* ``attn`` / ``local_attn``  — GQA attention (+MLP or MoE)
+* ``rglru``                  — Griffin recurrent block (+MLP)
+* ``ssd``                    — Mamba-2 block (self-contained)
+
+Layer stacks are executed with ``jax.lax.scan`` over *stacked* per-layer
+parameters; heterogeneous repeating patterns (recurrentgemma R,R,A) scan
+over super-blocks.  HLO size is therefore O(#distinct block kinds), not
+O(depth) — granite-34b's 88 layers compile as one scan body.
+
+Entry points:
+  forward(params, tokens | embeds)      -> logits (training/encoder)
+  loss(params, batch)                   -> scalar (+ MoE aux)
+  prefill(params, tokens, cache_len)    -> (last_logits, cache)
+  decode_step(params, cache, token, pos)-> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models.attention import KVCache, attention, decode_attention, mrope_tables, rope_tables
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec, embed_params, init_from_specs, mlp, mlp_params, rmsnorm, spec_shapes
+from repro.models.moe import moe_ffn, moe_params
+from repro.models.rglru import rglru_block, rglru_decode_step, rglru_params, rglru_state_init
+from repro.models.ssd import ssd_block, ssd_decode_step, ssd_params, ssd_state_init
+
+__all__ = ["LM", "StackSpec"]
+
+
+@dataclass(frozen=True)
+class StackSpec:
+    """One scanned stack: a block pattern repeated ``repeats`` times."""
+
+    pattern: tuple[str, ...]  # e.g. ("attn",) or ("rglru","rglru","attn")
+    repeats: int
+
+
+def _plan_stacks(cfg: ModelConfig) -> list[StackSpec]:
+    pat = cfg.layer_pattern()
+    period = len(cfg.block_types)
+    if period > 1:
+        reps = len(pat) // period
+        rem = len(pat) % period
+        stacks = [StackSpec(tuple(cfg.block_types), reps)]
+        if rem:
+            stacks.append(StackSpec(tuple(pat[-rem:]), 1))
+        return stacks
+    return [StackSpec((pat[0],), len(pat))]
+
+
+def _stack_specs(specs, n: int):
+    """Add a leading 'layers' axis of size n to every ParamSpec."""
+
+    def add(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype, s.init, s.scale)
+
+    return jax.tree.map(add, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.stacks = _plan_stacks(cfg)
+
+    # ------------------------------------------------------------------
+    # Parameters
+    # ------------------------------------------------------------------
+    def _block_specs(self, btype: str) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        out: dict[str, Any] = {"norm1": ParamSpec((d,), ("embed",), "float32", init="zeros")}
+        if btype in ("attn", "local_attn"):
+            out["attn"] = attn_mod.attention_params(cfg)
+        elif btype == "rglru":
+            out["rglru"] = rglru_params(cfg)
+        elif btype == "ssd":
+            out["ssd"] = ssd_params(cfg)
+            return out  # mamba2 blocks carry no separate MLP
+        out["norm2"] = ParamSpec((d,), ("embed",), "float32", init="zeros")
+        if cfg.is_moe:
+            out["moe"] = moe_params(cfg)
+        else:
+            out["mlp"] = mlp_params(d, cfg.d_ff, cfg.activation, cfg.dtype)
+        return out
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        specs: dict[str, Any] = {"embed": embed_params(cfg.vocab, cfg.d_model, cfg.dtype)}
+        if cfg.frontend_stub:
+            # modality frontend stub: a single projection from precomputed
+            # frame/patch embeddings (input_specs provide those)
+            specs["frontend"] = ParamSpec((cfg.d_model, cfg.d_model), ("embed", None), cfg.dtype)
+        for i, st in enumerate(self.stacks):
+            blk = {f"b{j}_{bt}": self._block_specs(bt) for j, bt in enumerate(st.pattern)}
+            specs[f"stack{i}"] = _stack_specs(blk, st.repeats)
+        specs["final_norm"] = ParamSpec((cfg.d_model,), ("embed",), "float32", init="zeros")
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"), cfg.dtype)
+        return specs
+
+    def init(self, rng: jax.Array):
+        return init_from_specs(rng, self.param_specs())
+
+    def param_shapes(self):
+        return spec_shapes(self.param_specs())
+
+    # ------------------------------------------------------------------
+    # Block application
+    # ------------------------------------------------------------------
+    def _apply_block(self, btype: str, bp: dict, x: jax.Array, rope, aux):
+        cfg = self.cfg
+        h = rmsnorm(x, bp["norm1"], cfg.norm_eps)
+        if btype in ("attn", "local_attn"):
+            sin, cos = rope
+            window = cfg.local_window if btype == "local_attn" else None
+            h = attention(bp["attn"], h, cfg, sin=sin, cos=cos, window=window)
+            x = x + h
+        elif btype == "rglru":
+            x = x + rglru_block(bp["rglru"], h, cfg)
+        elif btype == "ssd":
+            return x + ssd_block(bp["ssd"], h, cfg), aux
+        h2 = rmsnorm(x, bp["norm2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, a = moe_ffn(bp["moe"], h2, cfg)
+            aux = aux + a
+        else:
+            y = mlp(bp["mlp"], h2, cfg.activation)
+        return x + y, aux
+
+    def _maybe_remat(self, fn):
+        cfg = self.cfg
+        if cfg.remat == "none":
+            return fn
+        if cfg.remat == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            return jax.checkpoint(fn, policy=policy)
+        return jax.checkpoint(fn)  # "full"
+
+    @staticmethod
+    def _scan_or_loop(body, carry, xs, repeats: int, scan: bool):
+        """lax.scan over stacked layer params, or an unrolled python loop
+        (scan_layers=False — used by the roofline depth-extrapolation
+        protocol, where while-loop bodies must appear per-layer in HLO)."""
+        if scan:
+            return jax.lax.scan(body, carry, xs)
+        ys = []
+        for r in range(repeats):
+            sl = jax.tree.map(lambda p: p[r], xs)
+            carry, y = body(carry, sl)
+            ys.append(y)
+        if ys and ys[0] is not None:
+            ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+        else:
+            ys = None
+        return carry, ys
+
+    def _run_stacks(self, params: dict, x: jax.Array, rope):
+        cfg = self.cfg
+        aux0 = jnp.zeros((), jnp.float32)
+
+        def scan_stack(i: int, st: StackSpec, x, aux):
+            stack_params = params[f"stack{i}"]
+
+            def body(carry, layer_params):
+                x, aux = carry
+                for j, bt in enumerate(st.pattern):
+                    x, aux = self._apply_block(bt, layer_params[f"b{j}_{bt}"], x, rope, aux)
+                return (x, aux), None
+
+            body = self._maybe_remat(body)
+            (x, aux), _ = self._scan_or_loop(body, (x, aux), stack_params, st.repeats, cfg.scan_layers)
+            return x, aux
+
+        aux = aux0
+        for i, st in enumerate(self.stacks):
+            x, aux = scan_stack(i, st, x, aux)
+        return x, aux
+
+    def _embed_in(self, params: dict, tokens: jax.Array | None, embeds: jax.Array | None):
+        cfg = self.cfg
+        if embeds is not None:
+            x = embeds.astype(jnp.dtype(cfg.dtype))
+            if cfg.frontend_stub:
+                x = x @ params["frontend"]
+        else:
+            x = jnp.take(params["embed"], tokens, axis=0)
+            x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)  # gemma-style scale
+        return constrain(x, "batch", "seq", None)
+
+    def _rope_for(self, positions: jax.Array | None, B: int, S: int):
+        cfg = self.cfg
+        if cfg.pos_kind == "none":
+            return (None, None)
+        if positions is None:
+            positions = jnp.arange(S)
+        if cfg.pos_kind == "mrope":
+            if positions.ndim == 1:
+                positions = jnp.broadcast_to(positions, (3, B, S))
+            return mrope_tables(positions, cfg.mrope_sections, cfg.head_dim_, cfg.rope_theta)
+        return rope_tables(positions, cfg.head_dim_, cfg.rope_theta)
+
+    # ------------------------------------------------------------------
+    # Training / encoder forward
+    # ------------------------------------------------------------------
+    def forward(
+        self,
+        params: dict,
+        tokens: jax.Array | None = None,
+        *,
+        embeds: jax.Array | None = None,
+        positions: jax.Array | None = None,
+        last_only: bool = False,
+    ) -> tuple[jax.Array, jax.Array]:
+        """Full-sequence forward; returns (logits (B,S,V), moe_aux).
+
+        ``last_only`` slices to the final position *before* the LM head —
+        prefill only needs next-token logits, saving the (B,S,V) product.
+        """
+        x = self._embed_in(params, tokens, embeds)
+        B, S, _ = x.shape
+        rope = self._rope_for(positions, B, S)
+        x, aux = self._run_stacks(params, x, rope)
+        x = rmsnorm(x, params["final_norm"], self.cfg.norm_eps)
+        if last_only:
+            x = x[:, -1:]
+        head = params["embed"] if self.cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,vd->bsv", x, head)
+        logits = constrain(logits, "batch", "seq", "vocab")
+        return logits, aux
+
+    def loss(self, params: dict, batch: dict) -> jax.Array:
+        """Mean next-token (or frame-label) cross-entropy + MoE aux."""
+        logits, aux = self.forward(
+            params,
+            batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            positions=batch.get("positions"),
+        )
+        labels = batch["labels"]
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        mask = batch.get("mask")
+        nll = logz - gold
+        if mask is not None:
+            nll = nll * mask
+            denom = jnp.maximum(jnp.sum(mask), 1.0)
+        else:
+            denom = nll.size
+        return jnp.sum(nll) / denom + 0.01 * aux
+
+    # ------------------------------------------------------------------
+    # Serving: cache init / prefill / decode
+    # ------------------------------------------------------------------
+    def _layer_cache_spec(self, btype: str, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        if btype in ("attn", "local_attn"):
+            length = min(max_len, cfg.local_window) if btype == "local_attn" else max_len
+            kv, hd = cfg.kv_heads, cfg.head_dim_
+            return {
+                "k": jnp.zeros((batch, length, kv, hd), dt),
+                "v": jnp.zeros((batch, length, kv, hd), dt),
+                "pos": jnp.full((length,), -1, jnp.int32),
+            }
+        if btype == "rglru":
+            return rglru_state_init(cfg, batch)
+        if btype == "ssd":
+            return ssd_state_init(cfg, batch)
+        raise ValueError(btype)
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cache: dict[str, Any] = {}
+        for i, st in enumerate(self.stacks):
+            per_layer = {
+                f"b{j}_{bt}": self._layer_cache_spec(bt, batch, max_len)
+                for j, bt in enumerate(st.pattern)
+            }
+            cache[f"stack{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (st.repeats,) + a.shape).copy(), per_layer
+            )
+        return cache
+
+    def _layer_cache_axes(self, btype: str) -> dict:
+        """Logical sharding axes mirroring _layer_cache_spec leaves."""
+        if btype in ("attn", "local_attn"):
+            return {
+                "k": ("layers", "batch", None, "kv_heads", None),
+                "v": ("layers", "batch", None, "kv_heads", None),
+                "pos": ("layers", None),
+            }
+        if btype == "rglru":
+            return {
+                "h": ("layers", "batch", "ffn"),
+                "conv": ("layers", "batch", None, "ffn"),
+            }
+        if btype == "ssd":
+            return {
+                "h": ("layers", "batch", "heads", None, None),
+                "conv_x": ("layers", "batch", None, "ffn"),
+                "conv_B": ("layers", "batch", None, None),
+                "conv_C": ("layers", "batch", None, None),
+            }
+        raise ValueError(btype)
+
+    def cache_axes(self) -> dict:
+        """Pytree of logical-axes tuples parallel to init_cache output."""
+        out: dict[str, Any] = {}
+        for i, st in enumerate(self.stacks):
+            out[f"stack{i}"] = {
+                f"b{j}_{bt}": self._layer_cache_axes(bt) for j, bt in enumerate(st.pattern)
+            }
+        return out
+
+    def _decode_block(self, btype: str, bp: dict, lc: dict, x, position):
+        cfg = self.cfg
+        h = rmsnorm(x, bp["norm1"], cfg.norm_eps)
+        if btype in ("attn", "local_attn"):
+            window = cfg.local_window if btype == "local_attn" else None
+            length = lc["k"].shape[1]
+            slot = position % length if btype == "local_attn" else position
+            out, kv = self._decode_attn(bp["attn"], h, lc, slot, position, window)
+            x = x + out
+            lc = kv
+        elif btype == "rglru":
+            out, st = rglru_decode_step(bp["rglru"], h, lc, cfg)
+            x = x + out
+            lc = st
+        elif btype == "ssd":
+            out, st = ssd_decode_step(bp["ssd"], h, lc, cfg)
+            return x + out, st
+        h2 = rmsnorm(x, bp["norm2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = moe_ffn(bp["moe"], h2, cfg)
+        else:
+            y = mlp(bp["mlp"], h2, cfg.activation)
+        return x + y, lc
+
+    def _decode_attn(self, ap: dict, x, lc: dict, slot, position, window):
+        """Ring-buffer-aware single-token attention."""
+        import math as _m
+
+        cfg = self.cfg
+        B = x.shape[0]
+        hd, nh, nkv = cfg.head_dim_, cfg.n_heads, cfg.kv_heads
+        q, k_new, v_new = attn_mod._qkv(ap, x, cfg)
+        pos_arr = jnp.asarray(position, jnp.int32)[None]
+        if cfg.pos_kind != "none":
+            sin, cos = rope_tables(pos_arr, hd, cfg.rope_theta)
+            q = attn_mod.apply_rope(q, sin, cos)
+            k_new = attn_mod.apply_rope(k_new, sin, cos)
+        k = jax.lax.dynamic_update_slice(lc["k"], k_new.astype(lc["k"].dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(lc["v"], v_new.astype(lc["v"].dtype), (0, slot, 0, 0))
+        posbuf = jax.lax.dynamic_update_slice(lc["pos"], pos_arr, (slot,))
+        k = constrain(k, "batch", None, "kv_heads", None)
+        v = constrain(v, "batch", None, "kv_heads", None)
+
+        g = nh // nkv
+        scale = 1.0 / _m.sqrt(hd)
+        qf = (q.astype(jnp.float32) * scale).reshape(B, 1, nkv, g, hd)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qf, k.astype(jnp.float32))
+        valid = (posbuf >= 0) & (posbuf <= position)
+        if window is not None:
+            valid &= posbuf > position - window
+        s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bqkgs,bskd->bqkgd", p, v.astype(jnp.float32))
+        out = out.reshape(B, 1, nh * hd).astype(x.dtype)
+        y = out @ ap["wo"]
+        return constrain(y, "batch", "seq", None), {"k": k, "v": v, "pos": posbuf}
+
+    def decode_step(
+        self,
+        params: dict,
+        cache: dict,
+        tokens: jax.Array,  # (B,) int32
+        position: jax.Array,  # scalar int32
+    ) -> tuple[jax.Array, dict]:
+        """One autoregressive step: logits for the next token + new cache."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens[:, None], axis=0)
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+        x = constrain(x, "batch", None, None)
+
+        new_cache: dict[str, Any] = {}
+        for i, st in enumerate(self.stacks):
+            sp = params[f"stack{i}"]
+            sc = cache[f"stack{i}"]
+
+            def body(x, inp):
+                lp, lc = inp
+                lc_out = {}
+                for j, bt in enumerate(st.pattern):
+                    key = f"b{j}_{bt}"
+                    x, lc_out[key] = self._decode_block(bt, lp[key], lc[key], x, position)
+                return x, lc_out
+
+            x, nc = self._scan_or_loop(body, x, (sp, sc), st.repeats, cfg.scan_layers)
+            new_cache[f"stack{i}"] = nc
+
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,vd->bsv", x, head)[:, 0]
+        return constrain(logits, "batch", "vocab"), new_cache
+
+    def prefill(
+        self, params: dict, tokens: jax.Array, max_len: int | None = None
+    ) -> tuple[jax.Array, dict]:
+        """Prefill: one pass over the prompt filling the cache; returns
+        (last-token logits (B,V), cache).  The pass both computes the
+        residual stream and captures per-layer K/V (attention) or final
+        recurrent states (rglru/ssd).  ``max_len`` reserves decode head
+        room (default: prompt length + 1 step granularity handled by the
+        serving engine)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        max_len = max_len or S
+        assert max_len >= S
+        x = self._embed_in(params, tokens, None)
+        rope = self._rope_for(None, B, S)
+        cache = self.init_cache(B, max_len)
+        x, cache = self._forward_filling(params, x, rope, cache)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)[:, -1:]
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,vd->bsv", x, head)[:, 0]
+        return constrain(logits, "batch", "vocab"), cache
+
+    def _forward_filling(self, params, x, rope, cache):
+        """Forward pass that also captures each layer's cache entry."""
+        cfg = self.cfg
+        S = x.shape[1]
+
+        def fill_block(bt, bp, lc, x):
+            h = rmsnorm(x, bp["norm1"], cfg.norm_eps)
+            if bt in ("attn", "local_attn"):
+                _, k, v = attn_mod._qkv(bp["attn"], h, cfg)
+                sin, cos = rope
+                if sin is not None:
+                    k = attn_mod.apply_rope(k, sin, cos)
+                L = lc["k"].shape[1]
+                if L <= S:
+                    # ring-buffer (local) or exactly-sized cache: keep the
+                    # last L entries (requires S % L == 0 for the ring
+                    # slot mapping; checked by the serving engine)
+                    kk, vv = k[:, -L:], v[:, -L:]
+                    pp = jnp.arange(S)[-L:].astype(jnp.int32)
+                else:
+                    # head-room for decode: prompt in slots [0, S)
+                    pad = ((0, 0), (0, L - S), (0, 0), (0, 0))
+                    kk = jnp.pad(k, pad)
+                    vv = jnp.pad(v, pad)
+                    pp = jnp.pad(jnp.arange(S, dtype=jnp.int32), (0, L - S), constant_values=-1)
+                lc_new = {
+                    "k": kk.astype(lc["k"].dtype),
+                    "v": vv.astype(lc["v"].dtype),
+                    "pos": pp,
+                }
+                window = cfg.local_window if bt == "local_attn" else None
+                x = x + attention(bp["attn"], h, cfg, sin=sin, cos=cos, window=window)
+            elif bt == "rglru":
+                y, lc_new = rglru_block(bp["rglru"], h, cfg, return_state=True)
+                x = x + y
+            elif bt == "ssd":
+                y, lc_new = ssd_block(bp["ssd"], h, cfg, return_state=True)
+                return x + y, lc_new
+            h2 = rmsnorm(x, bp["norm2"], cfg.norm_eps)
+            if cfg.is_moe:
+                y, _ = moe_ffn(bp["moe"], h2, cfg)
+            else:
+                y = mlp(bp["mlp"], h2, cfg.activation)
+            return x + y, lc_new
+
+        for i, st in enumerate(self.stacks):
+            sp = params[f"stack{i}"]
+            sc = cache[f"stack{i}"]
+
+            def body(x, inp):
+                lp, lc = inp
+                lc_out = {}
+                for j, bt in enumerate(st.pattern):
+                    key = f"b{j}_{bt}"
+                    x, lc_out[key] = fill_block(bt, lp[key], lc[key], x)
+                return x, lc_out
+
+            x, nc = self._scan_or_loop(body, x, (sp, sc), st.repeats, cfg.scan_layers)
+            cache[f"stack{i}"] = nc
+        return x, cache

@@ -1,0 +1,5 @@
+"""repro.serving — batched inference engine (prefill + decode slots)."""
+
+from .engine import Request, ServeEngine
+
+__all__ = ["Request", "ServeEngine"]

@@ -1,0 +1,17 @@
+"""repro.targets — declarative hardware models (paper Sec. V).
+
+Each file instantiates a :class:`repro.core.MatchTarget` from public
+information only: the paper's published cycle constants for DIANA and
+GAP9, and the TPU v5e datasheet numbers used throughout this repo
+(197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI, 16 MiB VMEM).
+
+Adding a new target is exactly the paper's porting story: write one file
+with memories + spatial unrolling + cost constants + pattern table.  No
+engine code changes.
+"""
+
+from .diana import make_diana_target
+from .gap9 import make_gap9_target
+from .tpu_v5e import TPUv5eSpec, make_tpu_v5e_target
+
+__all__ = ["make_diana_target", "make_gap9_target", "make_tpu_v5e_target", "TPUv5eSpec"]

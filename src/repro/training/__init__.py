@@ -1,0 +1,6 @@
+"""repro.training — optimizer, train step, checkpointing, fault tolerance."""
+
+from .optimizer import OptConfig, adamw_init, adamw_update, lr_at
+from .train_loop import make_train_step, TrainState
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "lr_at", "make_train_step", "TrainState"]

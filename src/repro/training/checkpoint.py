@@ -1,0 +1,166 @@
+"""Sharded checkpointing with atomic writes, async save, elastic restore.
+
+Format: one directory per step —
+  step_000123/
+    manifest.json   tree structure, shapes, dtypes, sha256 per file
+    <idx>.npy       one file per leaf
+
+Properties needed at 1000+ nodes, demonstrated here at container scale:
+
+* **atomicity** — written to ``step_N.tmp`` then renamed; a crash never
+  leaves a half checkpoint that restore would pick up.
+* **integrity** — per-leaf sha256 in the manifest, verified on restore.
+* **async save** — a background thread serializes device arrays fetched
+  at save() call time, so the train loop continues immediately.
+* **elastic restore** — leaves are stored unsharded; restore device_puts
+  onto whatever mesh/sharding the *new* job uses (mesh A -> mesh B
+  rescale is a pure restore; tested 4 dev -> 2 dev).
+* **retention** — keep the last K steps, delete older.
+
+At true multi-pod scale each host would write only its addressable
+shards (jax.experimental.multihost_utils); the manifest format already
+records per-leaf shape/dtype so that extension is additive.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager"]
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory: str | Path, step: int, tree, *, blocking: bool = True) -> Path:
+    """Serialize a pytree of arrays. Returns the final path."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = _flatten_with_paths(tree)
+    # fetch to host NOW (so the caller may donate/overwrite device arrays);
+    # non-native dtypes (bfloat16) are stored widened to float32 with the
+    # true dtype recorded in the manifest.
+    host_leaves = []
+    true_dtypes = []
+    for l in leaves:
+        arr = np.asarray(l)
+        true_dtypes.append(str(arr.dtype))
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            arr = np.asarray(jax.numpy.asarray(l, jax.numpy.float32))
+        host_leaves.append(arr)
+
+    def _write():
+        manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+        for i, (arr, dt) in enumerate(zip(host_leaves, true_dtypes)):
+            f = tmp / f"{i:05d}.npy"
+            np.save(f, arr)
+            digest = hashlib.sha256(f.read_bytes()).hexdigest()
+            manifest["leaves"].append(
+                {"file": f.name, "shape": list(arr.shape), "dtype": dt, "sha256": digest}
+            )
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic publish
+
+    if blocking:
+        _write()
+    else:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return final
+    return final
+
+
+def latest_step(directory: str | Path) -> int | None:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in directory.iterdir()
+        if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp")
+        and (p / "manifest.json").exists()
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str | Path, step: int, like, *, shardings=None, verify: bool = True):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional parallel pytree of
+    NamedShardings for elastic placement on the current mesh."""
+    path = Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    leaves_like, treedef = jax.tree.flatten(like)
+    assert len(leaves_like) == len(manifest["leaves"]), (
+        f"leaf count mismatch: ckpt {len(manifest['leaves'])} vs model {len(leaves_like)}"
+    )
+    shard_leaves = jax.tree.leaves(shardings) if shardings is not None else [None] * len(leaves_like)
+
+    out = []
+    for i, (meta, ref, shd) in enumerate(zip(manifest["leaves"], leaves_like, shard_leaves)):
+        f = path / meta["file"]
+        if verify:
+            digest = hashlib.sha256(f.read_bytes()).hexdigest()
+            if digest != meta["sha256"]:
+                raise IOError(f"checkpoint corruption in {f}: sha mismatch")
+        arr = np.load(f)
+        assert list(arr.shape) == list(ref.shape), (meta, ref.shape)
+        jarr = jax.numpy.asarray(arr, dtype=ref.dtype)  # casts f32->bf16 etc.
+        out.append(jax.device_put(jarr, shd) if shd is not None else jarr)
+    return jax.tree.unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Retention + async orchestration around save/restore."""
+
+    def __init__(self, directory: str | Path, keep: int = 3, async_save: bool = True):
+        self.directory = Path(directory)
+        self.keep = keep
+        self.async_save = async_save
+        self._last_thread: threading.Thread | None = None
+
+    def save(self, step: int, tree) -> None:
+        save_checkpoint(self.directory, step, tree, blocking=not self.async_save)
+        self._gc()
+
+    def wait(self) -> None:
+        # saves fetch arrays synchronously; writer threads are daemonic.
+        # Poll until the manifest of the newest step exists.
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            s = latest_step(self.directory)
+            if s is not None:
+                return
+            time.sleep(0.05)
+
+    def restore_latest(self, like, shardings=None):
+        s = latest_step(self.directory)
+        if s is None:
+            return None, None
+        return s, restore_checkpoint(self.directory, s, like, shardings=shardings)
+
+    def _gc(self) -> None:
+        if not self.directory.exists():
+            return
+        steps = sorted(
+            p for p in self.directory.iterdir() if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp")
+        )
+        for p in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(p, ignore_errors=True)

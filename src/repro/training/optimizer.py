@@ -1,0 +1,81 @@
+"""AdamW in pure JAX with fp32 master weights and bf16 compute params.
+
+Optimizer state shardings follow the parameter shardings automatically
+(same tree structure, same dims), so FSDP rules shard m/v/master too —
+ZeRO-style without any optimizer-specific code.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "lr_at", "global_norm"]
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params) -> dict:
+    # copy=True: fp32 params would otherwise ALIAS master weights (astype
+    # is a no-op view) and break buffer donation in the train step
+    f32 = lambda p: jnp.array(p, jnp.float32, copy=True)
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "master": jax.tree.map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(grads, opt_state: dict, params, cfg: OptConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * master)
+        return m, v, new_master, new_master.astype(p.dtype)
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], opt_state["master"], params)
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda t: t[3], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": m, "v": v, "master": master, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

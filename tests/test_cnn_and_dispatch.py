@@ -1,0 +1,95 @@
+"""CNN graph execution + pattern matching + dispatch mechanics."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cnn import execute_graph, init_graph_params, mlperf_tiny_networks, conv_block_graph
+from repro.core import Graph, Node, dispatch, find_matches
+from repro.core.graph import dead_node_elimination, fold_requant_div
+from repro.core.patterns import conv_chain_pattern
+from repro.targets import make_gap9_target
+
+
+@pytest.mark.parametrize("name", ["MobileNet", "ResNet", "DSCNN", "DAE"])
+def test_networks_execute(name):
+    g = mlperf_tiny_networks()[name]
+    params = init_graph_params(g)
+    x = {k: np.random.default_rng(0).integers(-128, 128, shp).astype("float32") for k, shp in g.inputs.items()}
+    out = execute_graph(g, params, x)
+    (y,) = out.values()
+    assert np.isfinite(np.asarray(y)).all()
+    # requantized activations stay in int8 range throughout
+    assert np.abs(np.asarray(y)).max() <= 127 * 64  # final dense is unclipped
+
+
+@given(
+    ix=st.sampled_from([8, 16, 32]),
+    c=st.sampled_from([1, 16, 64]),
+    k=st.sampled_from([16, 64]),
+    depthwise=st.booleans(),
+)
+@settings(max_examples=12, deadline=None)
+def test_conv_block_property(ix, c, k, depthwise):
+    """Any paper-sweep conv geometry executes and dispatches somewhere."""
+    g = conv_block_graph(IX=ix, IY=ix, C=c, K=k, depthwise=depthwise)
+    params = init_graph_params(g)
+    x = {kk: np.zeros(shp, "float32") for kk, shp in g.inputs.items()}
+    out = execute_graph(g, params, x)
+    (y,) = out.values()
+    ch = c if depthwise else k
+    assert y.shape == (1, ix, ix, ch)
+    mg = dispatch(g, make_gap9_target())
+    assert mg.total_cycles() > 0
+
+
+def test_pattern_longest_match_wins():
+    tgt = make_gap9_target()
+    g = conv_block_graph(IX=16, IY=16, C=16, K=16)  # conv+bias+requant
+    mg = dispatch(g, tgt)
+    seg = mg.segments[0]
+    assert len(seg.nodes) == 3  # fused, not conv-alone
+    assert seg.pattern.endswith("conv_bias_requant")
+
+
+def test_pattern_chain_stops_at_branch():
+    nodes = [
+        Node("c1", "conv2d", ("x",), {"B": 1, "K": 8, "C": 8, "OY": 4, "OX": 4, "FY": 1, "FX": 1, "elem_bytes": 1}),
+        Node("r1", "relu", ("c1",), {"elem_bytes": 1}),
+        Node("r2", "relu", ("c1",), {"elem_bytes": 1}),  # second consumer
+    ]
+    g = Graph("branch", nodes, {"x": (1, 4, 4, 8)}, ("r1", "r2"))
+    p = conv_chain_pattern("conv_relu", ("relu",))
+    assert find_matches(g, nodes[0], [p]) == []  # branch breaks fusion
+
+
+def test_dead_node_elimination():
+    nodes = [
+        Node("a", "relu", ("x",), {}),
+        Node("dead", "relu", ("x",), {}),
+        Node("b", "relu", ("a",), {}),
+    ]
+    g = Graph("g", nodes, {"x": (4,)}, ("b",))
+    g2 = dead_node_elimination(g)
+    assert [n.name for n in g2.nodes] == ["a", "b"]
+
+
+def test_fold_requant_div():
+    nodes = [
+        Node("m", "mul", ("x",), {}),
+        Node("a", "add", ("m",), {}),
+        Node("d", "div", ("a",), {}),
+        Node("out", "relu", ("d",), {}),
+    ]
+    g = Graph("g", nodes, {"x": (4,)}, ("out",))
+    g2 = fold_requant_div(g)
+    ops = [n.op for n in g2.nodes]
+    assert "requant" in ops and "div" not in ops and "mul" not in ops
+
+
+def test_dispatch_covers_every_node():
+    tgt = make_gap9_target()
+    for name, g in mlperf_tiny_networks().items():
+        mg = dispatch(g, tgt)
+        covered = {n.name for s in mg.segments for n in s.nodes}
+        assert covered == {n.name for n in g.nodes}, name

@@ -1,0 +1,134 @@
+"""LOMA DSE engine: factorization, candidates, search invariants."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ComputeModel,
+    ExecutionModule,
+    MemoryLevel,
+    SpatialUnrolling,
+    conv2d_workload,
+    dense_workload,
+    divisors,
+    evaluate_mapping,
+    matmul_workload,
+    prime_factors,
+    search_schedule,
+)
+from repro.core.loma import order_candidates, tile_candidates
+from repro.core.workload import prod
+
+
+def small_module(l1=4096, async_dma=False, double_buffer=False):
+    return ExecutionModule(
+        name="m",
+        memories=(
+            MemoryLevel("L1", l1, 8.0, chunk_overhead=10.0),
+            MemoryLevel("L2", 1 << 24, 8.0),
+        ),
+        spatial={"*": SpatialUnrolling({})},
+        compute=ComputeModel(cycles_per_iter=1.0),
+        async_dma=async_dma,
+        double_buffer=double_buffer,
+        supported_ops=("conv2d", "dense", "matmul", "elementwise"),
+    )
+
+
+@given(st.integers(1, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_prime_factors_multiply_back(n):
+    pf = prime_factors(n)
+    assert prod(pf) == n
+    assert all(p >= 2 for p in pf)
+
+
+@given(st.integers(1, 2_000))
+@settings(max_examples=50, deadline=None)
+def test_divisors_are_divisors(n):
+    ds = divisors(n)
+    assert 1 in ds and n in ds
+    assert all(n % d == 0 for d in ds)
+    assert list(ds) == sorted(set(ds))
+
+
+def test_tile_candidates_cover_extremes():
+    w = dense_workload(B=4, K=96, C=128)
+    mod = small_module()
+    cands = tile_candidates(w, mod)
+    for l in w.loops:
+        assert 1 in cands[l.name]
+        assert l.size in cands[l.name]
+
+
+def test_order_candidates_are_permutations():
+    w = conv2d_workload(K=8, C=8, OY=4, OX=4, FY=3, FX=3)
+    for o in order_candidates(w):
+        assert sorted(o) == sorted(w.dim_names)
+
+
+def test_search_feasible_respects_l1():
+    w = dense_workload(B=8, K=512, C=512)  # full tensors >> 4 kB L1
+    mod = small_module(l1=4096)
+    res = search_schedule(w, mod, use_cache=False)
+    assert res.feasible
+    tiles = res.mapping.tiles
+    footprint = sum(op.footprint_bytes(tiles) for op in w.operands)
+    assert footprint <= 4096
+
+
+def test_search_matches_bruteforce_on_small():
+    w = dense_workload(B=2, K=8, C=8)
+    mod = small_module(l1=64)
+    res = search_schedule(w, mod, use_cache=False, budget=100_000)
+    # brute force over all divisor tiles x all orders
+    from itertools import permutations, product
+
+    best = math.inf
+    dims = w.dim_names
+    for combo in product(*(divisors(w.dim_sizes[d]) for d in dims)):
+        tiles = dict(zip(dims, combo))
+        for order in permutations(dims):
+            c = evaluate_mapping(w, tiles, order, mod)
+            if c.feasible:
+                best = min(best, c.latency_cycles)
+    assert res.latency_cycles == pytest.approx(best)
+
+
+def test_unsupported_op_infeasible():
+    w = matmul_workload(M=8, N=8, KD=8)
+    mod = small_module()  # supports matmul
+    assert search_schedule(w, mod, use_cache=False).feasible
+    mod2 = small_module()
+    mod2.supported_ops = ("conv2d",)
+    assert not search_schedule(w, mod2, use_cache=False).feasible
+
+
+def test_double_buffer_halves_usable_l1():
+    w = dense_workload(B=1, K=64, C=64)  # W = 4096 B exactly
+    full_tiles = {l.name: l.size for l in w.loops}
+    m_plain = small_module(l1=8192)
+    m_db = small_module(l1=8192, async_dma=True, double_buffer=True)
+    c_plain = evaluate_mapping(w, full_tiles, w.dim_names, m_plain)
+    c_db = evaluate_mapping(w, full_tiles, w.dim_names, m_db)
+    assert c_plain.feasible
+    assert not c_db.feasible  # 2x footprint charge overflows
+
+
+@given(
+    st.integers(2, 64),
+    st.integers(2, 64),
+    st.integers(2, 64),
+)
+@settings(max_examples=20, deadline=None)
+def test_search_never_worse_than_untiled_stream(K, C, B):
+    """The DSE winner must beat (or match) the naive untiled mapping."""
+    w = dense_workload(B=B, K=K, C=C)
+    mod = small_module(l1=1 << 20)
+    res = search_schedule(w, mod, use_cache=False)
+    naive = evaluate_mapping(w, {l.name: 1 for l in w.loops}, w.dim_names, mod)
+    assert res.feasible
+    if naive.feasible:
+        assert res.latency_cycles <= naive.latency_cycles + 1e-9

@@ -1,0 +1,104 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention, matmul_requant, moe_gmm, rglru_scan, ssd_scan
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("M,K,N", [(8, 16, 128), (32, 64, 128), (128, 128, 256), (16, 96, 384)])
+@pytest.mark.parametrize("shift,relu", [(8, False), (5, True)])
+def test_matmul_requant_sweep(rng, M, K, N, shift, relu):
+    a = jnp.asarray(rng.integers(-128, 128, (M, K)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (K, N)), jnp.int8)
+    mult = jnp.asarray(rng.integers(1, 8, (N,)), jnp.int32)
+    bias = jnp.asarray(rng.integers(-1000, 1000, (N,)), jnp.int32)
+    got = matmul_requant(a, w, mult, bias, shift=shift, relu=relu, block_m=8, block_n=128, block_k=16)
+    want = ref.matmul_requant_ref(a, w, mult, bias, shift=shift, relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,H,KV,S,D", [(1, 4, 4, 64, 32), (2, 8, 2, 128, 64), (1, 6, 1, 96, 16)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(rng, B, H, KV, S, D, causal, dtype):
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, KV, S, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, KV, S, D)), dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("E,C,D,F", [(2, 16, 32, 64), (8, 64, 128, 128), (3, 8, 16, 384)])
+def test_moe_gmm_sweep(rng, E, C, D, F):
+    x = jnp.asarray(rng.normal(size=(E, C, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(E, D, F)), jnp.float32)
+    got = moe_gmm(x, w, block_c=8, block_f=64, block_d=16)
+    want = ref.moe_gmm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,T,W", [(1, 32, 16), (2, 128, 64), (3, 64, 256)])
+def test_rglru_scan_sweep(rng, B, T, W):
+    a = jnp.asarray(rng.uniform(0.2, 0.999, (B, T, W)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, T, W)), jnp.float32)
+    got = rglru_scan(a, b, block_w=16, block_t=16)
+    want = ref.rglru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,T,P,N", [(1, 2, 32, 8, 16), (2, 4, 64, 16, 32)])
+def test_ssd_scan_sweep(rng, B, H, T, P, N):
+    xb = jnp.asarray(rng.normal(size=(B, H, T, P)), jnp.float32)
+    a = jnp.asarray(-np.abs(rng.normal(size=(B, H, T))) * 0.2, jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, T, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, T, N)), jnp.float32)
+    got = ssd_scan(xb, a, Bm, Cm, block_t=16)
+    want = ref.ssd_scan_ref(xb, a, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_kernel_matches_model_chunked_ref(rng):
+    """Cross-check: the Pallas SSD kernel agrees with the model-side
+    chunked SSD implementation (two independent derivations)."""
+    from repro.models.ssd import ssd_chunked_ref
+
+    B, H, T, P, N = 2, 3, 64, 8, 16
+    x = jnp.asarray(rng.normal(size=(B, T, H, P)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(B, T, H))) * 0.5 + 0.1, jnp.float32)
+    A = jnp.asarray(-np.abs(rng.normal(size=(H,))), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, T, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, T, N)), jnp.float32)
+
+    y_model, _ = ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=16)
+    xb = (x * dt[..., None]).transpose(0, 2, 1, 3)  # (B,H,T,P)
+    a = (dt * A[None, None, :]).transpose(0, 2, 1)  # (B,H,T)
+    y_kernel = ssd_scan(xb, a, Bm, Cm, block_t=16)
+    np.testing.assert_allclose(
+        np.asarray(y_kernel), np.asarray(y_model.transpose(0, 2, 1, 3)), atol=3e-4, rtol=3e-4
+    )
+
+
+def test_scheduled_wrappers_pick_legal_blocks(rng):
+    """ops.py: DSE-selected blocks must divide the shapes (any shape)."""
+    a = jnp.asarray(rng.integers(-10, 10, (48, 80)), jnp.int8)
+    w = jnp.asarray(rng.integers(-10, 10, (80, 112)), jnp.int8)
+    mult = jnp.ones((112,), jnp.int32)
+    bias = jnp.zeros((112,), jnp.int32)
+    got = ops.scheduled_matmul_requant(a, w, mult, bias, shift=4)
+    want = ref.matmul_requant_ref(a, w, mult, bias, shift=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_schedule_table_runs():
+    rows = ops.kernel_schedule_table()
+    assert len(rows) >= 5
+    for r in rows:
+        assert r["predicted_cycles"] > 0

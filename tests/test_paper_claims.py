@@ -1,0 +1,162 @@
+"""Validation against the paper's own claims (DESIGN.md Sec. 7).
+
+These tests assert the *facts* MATCH's evaluation establishes — dispatch
+decisions, orders-of-magnitude speedups, memory-scaling behaviour — on
+our reimplementation of the DIANA/GAP9 hardware models.  Absolute
+latencies differ (no hardware in the loop, coarse published constants);
+ranking and structure are what the paper says must hold.
+"""
+
+import pytest
+
+from repro.cnn import (
+    conv_block_graph,
+    dae_graph,
+    dscnn_graph,
+    fits_memory,
+    mlperf_tiny_networks,
+    mobilenet_v1_graph,
+    resnet8_graph,
+)
+from repro.core import dispatch
+from repro.targets import make_diana_target, make_gap9_target
+
+
+@pytest.fixture(scope="module")
+def gap9():
+    return make_gap9_target()
+
+
+@pytest.fixture(scope="module")
+def diana():
+    return make_diana_target()
+
+
+# ---- Sec. VI-A micro-benchmarks -------------------------------------------
+
+
+def test_diana_std_conv_speedup_vs_cpu(diana):
+    """Paper: up to 510x vs TVM for C=64 IX=32; avg 83x over the sweep.
+    We assert > 50x for the large conv and near-ideal MACs/cycle."""
+    g = conv_block_graph(IX=32, IY=32, C=64, K=64)
+    full = dispatch(g, diana)
+    cpu_only = dispatch(g, diana.restricted([]))
+    speedup = cpu_only.total_cycles() / full.total_cycles()
+    assert speedup > 50, speedup
+    # paper: 146.12 MACs/cycle (~57% of the 256 peak) for this geometry
+    assert full.macs_per_cycle() > 0.4 * 256
+
+
+def test_diana_dw_conv_much_less_efficient(diana):
+    """Paper: DW convs achieve far lower spatial utilization on DIANA."""
+    std = dispatch(conv_block_graph(IX=32, IY=32, C=64, K=64), diana)
+    dw = dispatch(conv_block_graph(IX=32, IY=32, C=64, K=64, depthwise=True), diana)
+    assert dw.macs_per_cycle() < 0.25 * std.macs_per_cycle()
+
+
+def test_gap9_ne16_beats_cluster_on_big_conv(gap9):
+    """NE16 achieves the biggest speedups for 64-channel convs (Fig. 8)."""
+    g = conv_block_graph(IX=32, IY=32, C=64, K=64)
+    ne16 = dispatch(g, gap9.restricted(["ne16"]))
+    cluster = dispatch(g, gap9.restricted(["cluster"]))
+    assert ne16.total_cycles() < cluster.total_cycles()
+    full = dispatch(g, gap9)
+    assert full.total_cycles() <= min(ne16.total_cycles(), cluster.total_cycles())
+
+
+# ---- Sec. VI-B/VI-C end-to-end + heterogeneity ----------------------------
+
+
+def test_dae_never_maps_to_ne16(gap9):
+    """Paper Table IV: the all-FC DAE cannot use NE16 (no dense support):
+    NE16+CPU == CPU-only; full == cluster+CPU."""
+    g = dae_graph()
+    full = dispatch(g, gap9)
+    assert "ne16" not in full.cycles_by_module()
+    ne16_cpu = dispatch(g, gap9.restricted(["ne16"]))
+    cpu = dispatch(g, gap9.restricted([]))
+    assert ne16_cpu.total_cycles() == pytest.approx(cpu.total_cycles())
+
+
+def test_dscnn_first_layer_falls_back_from_ne16(gap9):
+    """Paper: the 4x10 rectangular first filter is unsupported by NE16 and
+    runs on the cluster; remaining convs can use the accelerator."""
+    g = dscnn_graph()
+    full = dispatch(g, gap9)
+    assert full.module_of("conv_4x10") == "cluster"
+    mods = full.cycles_by_module()
+    assert "ne16" in mods  # the 1x1 pointwise convs go to NE16
+
+
+def test_heterogeneous_full_beats_single_module(gap9):
+    """Paper Table IV: Full >= each ablation on every network."""
+    for name, g in mlperf_tiny_networks().items():
+        full = dispatch(g, gap9).total_cycles()
+        cl = dispatch(g, gap9.restricted(["cluster"])).total_cycles()
+        ne = dispatch(g, gap9.restricted(["ne16"])).total_cycles()
+        cpu = dispatch(g, gap9.restricted([])).total_cycles()
+        assert full <= cl + 1e-6 and full <= ne + 1e-6 and full <= cpu + 1e-6, name
+
+
+def test_match_vs_cpu_orders_of_magnitude(gap9, diana):
+    """Paper Table III: MATCH beats plain TVM by 10-170x end-to-end."""
+    for tgt in (gap9, diana):
+        g = resnet8_graph()
+        full = dispatch(g, tgt).total_cycles()
+        cpu = dispatch(g, tgt.restricted([])).total_cycles()
+        assert cpu / full > 10, (tgt.name, cpu / full)
+
+
+def test_mobilenet_oom_on_diana_only():
+    """Paper Table III: MobileNet is OoM on DIANA (512 kB L2), deployable
+    on GAP9 (1.5 MB L2)."""
+    g = mobilenet_v1_graph()
+    reserve = 128 * 1024
+    assert not fits_memory(g, 512 * 1024, pad_to=16, runtime_reserve=reserve)
+    assert fits_memory(g, 3 * 512 * 1024, pad_to=1, runtime_reserve=reserve)
+    # and the other three fit on DIANA
+    for other in (resnet8_graph(), dscnn_graph(), dae_graph()):
+        assert fits_memory(other, 512 * 1024, pad_to=16, runtime_reserve=reserve)
+
+
+# ---- Fig. 9/10: L1 scaling -------------------------------------------------
+
+
+def test_l1_scaling_graceful_degradation(gap9):
+    """Paper: MATCH keeps deploying (and degrades gracefully) as L1
+    shrinks, where fixed-heuristic tilers fall off a cliff / fail."""
+    g = resnet8_graph()
+    prev = None
+    for l1 in (128, 64, 32, 16, 8):
+        tgt = gap9.scaled_l1(l1 * 1024)
+        mg = dispatch(tgt and g, tgt)
+        mac = mg.macs_per_cycle()
+        assert mac > 0  # always deploys (CPU fallback at worst)
+        if prev is not None:
+            assert mac <= prev * 1.25 + 1e-9  # no pathological jumps up
+        prev = mac
+
+
+def test_l1_scaling_monotone_latency(gap9):
+    g = resnet8_graph()
+    lat = [
+        dispatch(g, gap9.scaled_l1(k * 1024)).total_cycles()
+        for k in (128, 32, 8)
+    ]
+    assert lat[0] <= lat[1] * 1.01 and lat[1] <= lat[2] * 1.01
+
+
+def test_fig11_resnet_block_mapping(gap9):
+    """Paper Fig. 11: on GAP9's ResNet, NE16 processes every conv, the
+    cluster handles the residual additions and the final dense block."""
+    from repro.cnn import resnet8_graph
+    from repro.core import dispatch
+
+    mg = dispatch(resnet8_graph(), gap9)
+    for seg in mg.segments:
+        if seg.anchor.op == "conv2d":
+            assert seg.module == "ne16", seg.anchor.name
+        elif seg.anchor.op == "add":
+            assert seg.module == "cluster", seg.anchor.name
+        elif seg.anchor.op == "dense":
+            assert seg.module == "cluster"
