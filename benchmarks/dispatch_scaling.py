@@ -1,0 +1,83 @@
+"""Dispatch scaling: DP vs greedy quality, cold vs warm-cache wall-clock.
+
+For each MLPerf-Tiny network on GAP9:
+
+* predicted end-to-end latency (transfer costs included) of the DP
+  partitioner vs the legacy greedy largest-match policy — the DP must
+  never be worse;
+* wall-clock of a cold dispatch (empty in-memory + on-disk schedule
+  caches) vs a warm one (persistent SchedulePlanner JSON cache present,
+  in-memory caches wiped) — the warm path skips the LOMA search.
+
+Emits the usual CSV rows plus one JSON summary line (``dispatch_scaling
+JSON: {...}``) and writes ``dispatch_scaling.json`` next to the CWD for
+the bench trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+import tempfile
+from pathlib import Path
+
+from repro.cnn import mlperf_tiny_networks
+from repro.core import SchedulePlanner, clear_schedule_cache, dispatch
+from repro.targets import make_gap9_target
+
+from .common import emit, timed
+
+
+def run(out_path: str | None = "dispatch_scaling.json") -> list[str]:
+    rows = []
+    summary: dict[str, dict] = {}
+    tmpdir = Path(tempfile.mkdtemp(prefix="match_dispatch_scaling_"))
+    tgt = make_gap9_target()
+
+    for name, g in mlperf_tiny_networks().items():
+        cache = tmpdir / f"{name}.json"
+
+        clear_schedule_cache()
+        greedy_mg, greedy_us = timed(dispatch, g, tgt, policy="greedy")
+
+        # planner construction happens *inside* the timed call so the warm
+        # number includes loading/deserializing the persistent JSON cache
+        def compile_with_cache():
+            return dispatch(g, tgt, planner=SchedulePlanner(cache_path=cache))
+
+        clear_schedule_cache()
+        cold_mg, cold_us = timed(compile_with_cache)
+
+        clear_schedule_cache()  # warm run may only use the on-disk cache
+        warm_mg, warm_us = timed(compile_with_cache)
+
+        speedup = cold_us / max(warm_us, 1e-9)
+        dp_ms = cold_mg.latency_s() * 1e3
+        greedy_ms = greedy_mg.latency_s() * 1e3
+        summary[name] = {
+            "dp_pred_ms": dp_ms,
+            "greedy_pred_ms": greedy_ms,
+            "dp_transfer_cycles": cold_mg.transfer_cycles(),
+            "greedy_transfer_cycles": greedy_mg.transfer_cycles(),
+            "cold_dispatch_us": cold_us,
+            "warm_dispatch_us": warm_us,
+            "warm_speedup": speedup,
+            "dp_no_worse_than_greedy": dp_ms <= greedy_ms + 1e-9,
+        }
+        rows.append(
+            emit(
+                f"dispatch_scaling_{name}",
+                cold_us,
+                f"dp_ms={dp_ms:.3f};greedy_ms={greedy_ms:.3f};"
+                f"warm_us={warm_us:.1f};warm_speedup={speedup:.1f}x",
+            )
+        )
+
+    payload = json.dumps(summary, indent=2, sort_keys=True)
+    print(f"dispatch_scaling JSON: {json.dumps(summary, sort_keys=True)}", flush=True)
+    if out_path:
+        Path(out_path).write_text(payload)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -2,9 +2,11 @@
 
 Emits the dispatcher's decision for every ResNet segment (which HW
 module runs it, and the per-module predicted cycles) — the decision
-breakdown the paper visualises: NE16 takes the convolutions, the
-cluster takes the residual additions and the final dense block, the
-CPU keeps the average pooling.
+breakdown the paper visualises: NE16 takes the 3x3 convolutions, the
+cluster takes the residual additions and the final dense block.  With
+transfer-aware DP dispatch a 1x1 projection conv may stay on the
+cluster when both its producer and consumer run there (two L2 round
+trips cost more than NE16's compute edge on that tiny layer).
 """
 
 from __future__ import annotations

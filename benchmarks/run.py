@@ -17,6 +17,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (
+        dispatch_scaling,
         fig7_diana_micro,
         fig8_gap9_micro,
         fig9_10_l1_scaling,
@@ -34,6 +35,7 @@ def main() -> None:
         "table4": table4_heterogeneity,
         "fig9_10": fig9_10_l1_scaling,
         "fig11": fig11_resnet_mapping,
+        "dispatch_scaling": dispatch_scaling,
         "tpu_kernels": tpu_kernel_schedules,
         "pod_roofline": pod_roofline_summary,
     }

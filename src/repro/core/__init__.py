@@ -10,10 +10,17 @@ The paper's primary contribution, reimplemented as a composable library:
 * KernelSchedule / schedule_for_kernel — DSE output -> Pallas BlockSpecs
 """
 
-from .cost_model import CostBreakdown, evaluate_mapping, operand_traffic, tile_chunks
+from .cost_model import (
+    CostBreakdown,
+    evaluate_mapping,
+    operand_traffic,
+    tile_chunks,
+    transfer_cost,
+)
 from .dispatcher import MappedGraph, MappedSegment, dispatch
 from .graph import Graph, Node, apply_transforms
 from .loma import (
+    SchedulePlanner,
     ScheduleResult,
     TemporalMapping,
     clear_schedule_cache,
@@ -23,7 +30,14 @@ from .loma import (
 )
 from .patterns import Pattern, PatternMatch, default_workload, find_matches
 from .schedule import KernelSchedule, schedule_for_kernel, tpu_align
-from .target import ComputeModel, ExecutionModule, MatchTarget, MemoryLevel, SpatialUnrolling
+from .target import (
+    ComputeModel,
+    ExecutionModule,
+    Interconnect,
+    MatchTarget,
+    MemoryLevel,
+    SpatialUnrolling,
+)
 from .workload import (
     LoopDim,
     Operand,
@@ -41,12 +55,14 @@ __all__ = [
     "evaluate_mapping",
     "operand_traffic",
     "tile_chunks",
+    "transfer_cost",
     "MappedGraph",
     "MappedSegment",
     "dispatch",
     "Graph",
     "Node",
     "apply_transforms",
+    "SchedulePlanner",
     "ScheduleResult",
     "TemporalMapping",
     "clear_schedule_cache",
@@ -62,6 +78,7 @@ __all__ = [
     "tpu_align",
     "ComputeModel",
     "ExecutionModule",
+    "Interconnect",
     "MatchTarget",
     "MemoryLevel",
     "SpatialUnrolling",

@@ -22,10 +22,16 @@ import math
 from dataclasses import dataclass, field
 from typing import Mapping, Sequence
 
-from .target import ExecutionModule, MemoryLevel
+from .target import ExecutionModule, Interconnect, MemoryLevel
 from .workload import Operand, Workload, prod
 
-__all__ = ["CostBreakdown", "evaluate_mapping", "operand_traffic", "tile_chunks"]
+__all__ = [
+    "CostBreakdown",
+    "evaluate_mapping",
+    "operand_traffic",
+    "tile_chunks",
+    "transfer_cost",
+]
 
 
 @dataclass(frozen=True)
@@ -160,6 +166,48 @@ def operand_traffic(
         n_transfers = load
     chunks_per_transfer = tile_chunks(operand, tiles, workload.dim_sizes)
     return bytes_moved, n_transfers * chunks_per_transfer
+
+
+# ---------------------------------------------------------------------------
+# Cross-module transfer model (heterogeneous dispatch)
+# ---------------------------------------------------------------------------
+
+
+def transfer_cost(
+    nbytes: float,
+    src: ExecutionModule,
+    dst: ExecutionModule,
+    interconnect: Interconnect | None = None,
+) -> float:
+    """Cycles to move ``nbytes`` of activations across a module boundary.
+
+    Per-segment ``L_mem`` already charges each segment's own L2<->L1
+    traffic; what a *module switch* adds on top is the loss of overlap:
+
+    * the producer's write-back and the consumer's prefetch cannot be
+      hidden behind the neighbouring segment's compute (the DMA engines /
+      job queues of the two modules are independent), so the edge's bytes
+      serialise on the shared home-level path — once if both sides
+      double-buffer asynchronously, twice (write-back + refetch both
+      exposed) if either side uses blocking DMA;
+    * a fixed handoff: interconnect ``hop_latency`` plus each module's
+      ``handoff_cycles`` (job reconfiguration, fork/join, flush).
+
+    Same-module edges cost nothing extra: the data streams through the
+    module's own hierarchy and is already accounted by the segment costs.
+
+    An edge consumed by several cross-module segments is charged once per
+    consuming segment: each consumer issues its own DMA job (hop +
+    handoff + fetch serialization).  The producer's single write-back is
+    thereby counted more than once — a deliberate conservative
+    simplification that keeps the DP state local to the consumer.
+    """
+    if src.name == dst.name:
+        return 0.0
+    ic = interconnect or Interconnect()
+    trips = 1.0 if (src.async_dma and dst.async_dma) else 2.0
+    serial = trips * max(nbytes, 0.0) / max(ic.bandwidth, 1e-9)
+    return ic.hop_latency + src.handoff_cycles + dst.handoff_cycles + serial
 
 
 # ---------------------------------------------------------------------------

@@ -1,14 +1,33 @@
-"""Heterogeneous accelerator-aware dispatch (paper Sec. IV-B).
+"""Cost-driven heterogeneous graph partitioning (paper Sec. IV-B).
 
-For every graph segment, all execution modules whose pattern tables match
-are costed through the LOMA DSE; the module with the minimum predicted
-latency wins the segment.  Unmatched (or nowhere-feasible) segments fall
-back to the target's fallback module — the "un-matched -> TVM default on
-the main CPU" path of the paper.
+The paper's claim (Table IV "Full") is that choosing *which execution
+module runs each graph segment* jointly — NE16 and the 8-core cluster on
+the same network — beats any single-accelerator mapping.  This module
+implements that decision as a **DP shortest path over the graph IR**
+rather than the greedy per-node walk of early MATCH/HTVM flows:
 
-This is the piece missing from DORY/HTVM that the paper highlights: on
-GAP9 it lets the NE16 accelerator and the 8-core cluster be used *on the
-same network*, each where it is fastest (Table IV "Full" column).
+1. *Candidate enumeration* — every pattern match of every module's
+   pattern table anchored at every node (all fusion lengths, not just the
+   largest), plus the target's fallback module per node.
+2. *Batched DSE* — all (workload, module) LOMA queries are collected,
+   deduped by geometry key and evaluated through a
+   :class:`~repro.core.loma.SchedulePlanner` (thread pool + optional
+   persistent JSON cache, so a warm re-compile skips the search).
+3. *Transfer-aware DP* — a Viterbi-style pass over the topological order
+   picks the segmentation *and* the module assignment minimising
+   ``sum(segment cycles) + sum(cross-module transfer cycles)``, where
+   transfers are priced by :func:`~repro.core.cost_model.transfer_cost`
+   from the edge's activation bytes and the target's
+   :class:`~repro.core.target.Interconnect`.  The DP state at a segment
+   boundary is the module of every still-live producer edge — exact on
+   chains and on the bounded-width residual branches of the MLPerf-Tiny
+   nets, beam-limited (``beam``) when branch points proliferate.
+
+``dispatch(graph, target)`` keeps its `MappedGraph` contract for
+``cnn/execute.py``, ``examples/`` and ``benchmarks/``; the old greedy
+policy survives as ``dispatch(..., policy="greedy")`` for baselines (its
+result is annotated with the same transfer accounting so predicted
+latencies stay comparable).
 """
 
 from __future__ import annotations
@@ -16,8 +35,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Sequence
 
+from .cost_model import evaluate_mapping, transfer_cost
 from .graph import Graph, Node
-from .loma import ScheduleResult, search_schedule
+from .loma import SchedulePlanner, ScheduleResult, TemporalMapping, search_schedule
 from .patterns import PatternMatch, default_workload, find_matches
 from .target import ExecutionModule, MatchTarget
 from .workload import Workload
@@ -34,12 +54,19 @@ class MappedSegment:
     schedule: ScheduleResult | None  # None for zero-cost structural ops
     workload: Workload | None
     pattern: str = ""
+    # cycles to bring this segment's external inputs across a module
+    # boundary (0 when every producer ran on the same module)
+    transfer_cycles: float = 0.0
 
     @property
     def cycles(self) -> float:
         if self.schedule is None:
             return 0.0
         return self.schedule.latency_cycles
+
+    @property
+    def total_cycles(self) -> float:
+        return self.cycles + self.transfer_cycles
 
     @property
     def anchor(self) -> Node:
@@ -53,9 +80,17 @@ class MappedGraph:
     graph: Graph
     target: MatchTarget
     segments: list[MappedSegment]
+    attrs: dict = field(default_factory=dict)
 
     def total_cycles(self) -> float:
+        """Predicted end-to-end cycles, cross-module transfers included."""
+        return sum(s.total_cycles for s in self.segments)
+
+    def compute_cycles(self) -> float:
         return sum(s.cycles for s in self.segments)
+
+    def transfer_cycles(self) -> float:
+        return sum(s.transfer_cycles for s in self.segments)
 
     def latency_s(self, frequency_hz: float | None = None) -> float:
         f = frequency_hz or self.target.fallback.frequency_hz
@@ -82,12 +117,249 @@ class MappedGraph:
         lines = [f"MappedGraph[{self.graph.name} on {self.target.name}]"]
         for s in self.segments:
             names = "+".join(n.name for n in s.nodes)
+            xfer = f" +{s.transfer_cycles:.0f} xfer" if s.transfer_cycles else ""
             lines.append(
-                f"  {names:<40s} -> {s.module:<10s} {s.cycles:>14.0f} cyc"
+                f"  {names:<40s} -> {s.module:<10s} {s.cycles:>14.0f} cyc{xfer}"
                 + (f"  ({s.pattern})" if s.pattern else "")
             )
-        lines.append(f"  TOTAL {self.total_cycles():.0f} cycles, {self.macs_per_cycle():.2f} MACs/cyc")
+        lines.append(
+            f"  TOTAL {self.total_cycles():.0f} cycles"
+            f" ({self.transfer_cycles():.0f} in transfers),"
+            f" {self.macs_per_cycle():.2f} MACs/cyc"
+        )
         return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Candidate:
+    """One (segment, module) option anchored at a topological position."""
+
+    nodes: tuple[Node, ...]
+    module: ExecutionModule
+    workload: Workload | None
+    pattern: str
+    schedule: ScheduleResult | None = None
+
+    @property
+    def cycles(self) -> float:
+        return self.schedule.latency_cycles if self.schedule is not None else 0.0
+
+
+def _untiled_stream_schedule(wl: Workload, module: ExecutionModule) -> ScheduleResult:
+    """The always-feasible 'stream every element' mapping for the fallback
+    CPU — the paper's un-matched -> plain TVM path must never fail."""
+    tiles = {l.name: 1 for l in wl.loops}
+    cost = evaluate_mapping(wl, tiles, tuple(wl.dim_names), module)
+    return ScheduleResult(wl.name, module.name, TemporalMapping(tiles, tuple(wl.dim_names)), cost, 1)
+
+
+def _enumerate_candidates(
+    graph: Graph,
+    target: MatchTarget,
+    planner: SchedulePlanner,
+    budget: int,
+) -> list[list[_Candidate]]:
+    """All candidate segments per topo position + registered DSE queries.
+
+    Matches are kept only when their node chain is contiguous in the topo
+    order (true for single-consumer fusion chains built by the netlists),
+    which keeps the DP a clean segmentation over the node list.  Each
+    position always retains the fallback candidate so the DP never dead-ends.
+    """
+    nodes = graph.nodes
+    cands: list[list[_Candidate]] = [[] for _ in nodes]
+    for i, node in enumerate(nodes):
+        for module in target.modules:
+            for m in find_matches(graph, node, module.patterns):
+                if m.nodes != tuple(nodes[i : i + len(m.nodes)]):
+                    continue  # non-contiguous chain: not a DP segment
+                wl = m.workload()  # built once: reused for DSE + the segment
+                planner.request(wl, module, budget=budget)
+                cands[i].append(_Candidate(m.nodes, module, wl, m.pattern.name))
+        wl = default_workload(node)
+        if wl is not None:
+            planner.request(wl, target.fallback, budget=budget)
+            cands[i].append(_Candidate((node,), target.fallback, wl, "fallback"))
+        else:
+            # structural ops (reshape, ...) cost ~0 on *any* module: offer
+            # every placement so the DP can keep them transfer-transparent
+            # inside a same-module run instead of pinning them to the CPU
+            # and pricing phantom round trips on both sides.
+            for module in target.all_modules():
+                cands[i].append(_Candidate((node,), module, None, "structural"))
+    return cands
+
+
+def _resolve_schedules(
+    cands: list[list[_Candidate]],
+    planner: SchedulePlanner,
+    budget: int,
+) -> list[list[_Candidate]]:
+    """Attach DSE results; drop infeasible matches, rescue the fallback."""
+    out: list[list[_Candidate]] = []
+    for options in cands:
+        kept: list[_Candidate] = []
+        for c in options:
+            if c.workload is None:
+                kept.append(c)  # structural: zero cost by construction
+                continue
+            sched = planner.get(c.workload, c.module, budget=budget)
+            if not sched.feasible:
+                if c.pattern == "fallback":
+                    sched = _untiled_stream_schedule(c.workload, c.module)
+                else:
+                    continue
+            c.schedule = sched
+            kept.append(c)
+        out.append(kept)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Transfer accounting
+# ---------------------------------------------------------------------------
+
+
+def _external_inputs(graph: Graph, seg_nodes: Sequence[Node]) -> dict[str, int]:
+    """producer-name -> edge bytes for inputs produced outside the segment
+    by another graph node (graph inputs live in shared memory already)."""
+    inside = {n.name for n in seg_nodes}
+    edges: dict[str, int] = {}
+    for n in seg_nodes:
+        for inp in n.inputs:
+            if inp in inside or not graph.has(inp):
+                continue
+            edges[inp] = graph.edge_bytes(inp)
+    return edges
+
+
+def _edges_transfer(
+    edges: dict[str, int],
+    module: ExecutionModule,
+    mod_of: dict[str, str],
+    target: MatchTarget,
+    modmap: dict[str, ExecutionModule],
+) -> float:
+    total = 0.0
+    for producer, nbytes in edges.items():
+        src = modmap[mod_of[producer]]
+        total += transfer_cost(nbytes, src, module, target.interconnect)
+    return total
+
+
+def _segment_transfer(
+    graph: Graph,
+    seg_nodes: Sequence[Node],
+    module: ExecutionModule,
+    mod_of: dict[str, str],
+    target: MatchTarget,
+    modmap: dict[str, ExecutionModule],
+) -> float:
+    return _edges_transfer(_external_inputs(graph, seg_nodes), module, mod_of, target, modmap)
+
+
+# ---------------------------------------------------------------------------
+# The DP (Viterbi) partitioner
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class _State:
+    cost: float
+    segments: tuple[MappedSegment, ...]
+    mod_of: dict  # node name -> module name for every covered node
+
+
+def _dispatch_dp(
+    graph: Graph,
+    target: MatchTarget,
+    planner: SchedulePlanner,
+    budget: int,
+    beam: int,
+    verbose: bool,
+) -> MappedGraph:
+    nodes = graph.nodes
+    n = len(nodes)
+    if n == 0:
+        return MappedGraph(graph, target, [])
+
+    cands = _enumerate_candidates(graph, target, planner, budget)
+    planner.flush()
+    cands = _resolve_schedules(cands, planner, budget)
+
+    modmap = {m.name: m for m in target.all_modules()}
+
+    # last topo position that still consumes each node's output
+    last_use = {nd.name: -1 for nd in nodes}
+    for i, nd in enumerate(nodes):
+        for inp in nd.inputs:
+            if inp in last_use:
+                last_use[inp] = max(last_use[inp], i)
+    # live[j]: producers whose edge crosses segment boundary j
+    live: list[tuple[str, ...]] = [()] * (n + 1)
+    for j in range(1, n + 1):
+        live[j] = tuple(
+            nd.name for nd in nodes[:j] if last_use[nd.name] >= j
+        )
+
+    def state_key(j: int, mod_of: dict) -> tuple:
+        return tuple((p, mod_of[p]) for p in live[j])
+
+    states: list[dict[tuple, _State]] = [dict() for _ in range(n + 1)]
+    states[0][()] = _State(0.0, (), {})
+
+    for i in range(n):
+        here = states[i]
+        if not here:
+            continue
+        ranked = sorted(here.values(), key=lambda s: s.cost)[: max(1, beam)]
+        for c in cands[i]:
+            # the producer -> bytes map is state-independent: hoist it out
+            # of the beam loop (only the per-producer module varies)
+            edges = _external_inputs(graph, c.nodes)
+            for st in ranked:
+                j = i + len(c.nodes)
+                xfer = _edges_transfer(edges, c.module, st.mod_of, target, modmap)
+                seg = MappedSegment(
+                    c.nodes,
+                    c.module.name,
+                    c.schedule,
+                    c.workload,
+                    pattern=c.pattern,
+                    transfer_cycles=xfer,
+                )
+                cost = st.cost + seg.cycles + xfer
+                mod_of = dict(st.mod_of)
+                for nd in c.nodes:
+                    mod_of[nd.name] = c.module.name
+                key = state_key(j, mod_of)
+                cur = states[j].get(key)
+                if cur is None or cost < cur.cost:
+                    states[j][key] = _State(cost, st.segments + (seg,), mod_of)
+
+    final = min(states[n].values(), key=lambda s: s.cost)
+    if verbose:
+        for s in final.segments:
+            print(
+                f"  dispatch {s.anchor.name} -> {s.module}"
+                f" ({s.cycles:.0f} cyc + {s.transfer_cycles:.0f} xfer)"
+            )
+    return MappedGraph(
+        graph,
+        target,
+        list(final.segments),
+        attrs={"policy": "dp", "planner_stats": dict(planner.stats)},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Greedy baseline (the seed policy, kept for ablation benchmarks)
+# ---------------------------------------------------------------------------
 
 
 def _fallback_segment(
@@ -98,30 +370,14 @@ def _fallback_segment(
         return MappedSegment(nodes, target.fallback.name, None, None, pattern="structural")
     sched = search_schedule(wl, target.fallback, budget=budget)
     if not sched.feasible:
-        # the fallback CPU must always execute: model as untiled streaming
-        from .cost_model import evaluate_mapping
-        from .loma import TemporalMapping
-
-        tiles = {l.name: 1 for l in wl.loops}
-        cost = evaluate_mapping(wl, tiles, tuple(wl.dim_names), target.fallback)
-        sched = ScheduleResult(wl.name, target.fallback.name, TemporalMapping(tiles, tuple(wl.dim_names)), cost, 1)
+        sched = _untiled_stream_schedule(wl, target.fallback)
     return MappedSegment(nodes, target.fallback.name, sched, wl, pattern="fallback")
 
 
-def dispatch(
-    graph: Graph,
-    target: MatchTarget,
-    *,
-    budget: int = 4000,
-    verbose: bool = False,
+def _dispatch_greedy(
+    graph: Graph, target: MatchTarget, budget: int, verbose: bool
 ) -> MappedGraph:
-    """Partition ``graph`` across ``target``'s execution modules.
-
-    Paper Sec. IV-B: iterate the pattern tables of every module; for nested
-    patterns keep the largest; for a pattern supported by several modules,
-    DSE each and keep the minimum-predicted-latency module; unmatched ->
-    fallback.
-    """
+    """Largest-match-first, transfer-blind per-node walk (HTVM-style)."""
     segments: list[MappedSegment] = []
     consumed: set[str] = set()
 
@@ -129,7 +385,6 @@ def dispatch(
         if node.name in consumed:
             continue
 
-        # gather matches from every module's pattern table
         per_module: list[tuple[ExecutionModule, PatternMatch]] = []
         for module in target.modules:
             for m in find_matches(graph, node, module.patterns):
@@ -137,21 +392,20 @@ def dispatch(
 
         chosen: MappedSegment | None = None
         if per_module:
-            # largest-match-first (fusion always convenient), then cost argmin
             max_len = max(len(m.nodes) for _, m in per_module)
             for length in range(max_len, 0, -1):
                 cands = [(mod, m) for mod, m in per_module if len(m.nodes) == length]
-                best: tuple[ExecutionModule, PatternMatch, ScheduleResult] | None = None
+                best: tuple[ExecutionModule, PatternMatch, Workload, ScheduleResult] | None = None
                 for mod, m in cands:
-                    wl = m.workload()
+                    wl = m.workload()  # built once per match
                     sched = search_schedule(wl, mod, budget=budget)
                     if not sched.feasible:
                         continue
-                    if best is None or sched.latency_cycles < best[2].latency_cycles:
-                        best = (mod, m, sched)
+                    if best is None or sched.latency_cycles < best[3].latency_cycles:
+                        best = (mod, m, wl, sched)
                 if best is not None:
-                    mod, m, sched = best
-                    chosen = MappedSegment(m.nodes, mod.name, sched, m.workload(), pattern=m.pattern.name)
+                    mod, m, wl, sched = best
+                    chosen = MappedSegment(m.nodes, mod.name, sched, wl, pattern=m.pattern.name)
                     break
 
         if chosen is None:
@@ -162,4 +416,61 @@ def dispatch(
         if verbose:
             print(f"  dispatch {chosen.anchor.name} -> {chosen.module} ({chosen.cycles:.0f} cyc)")
 
-    return MappedGraph(graph, target, segments)
+    # annotate the greedy result with the same transfer accounting the DP
+    # optimises, so predicted latencies are directly comparable
+    modmap = {m.name: m for m in target.all_modules()}
+    mod_of = {n.name: s.module for s in segments for n in s.nodes}
+    import dataclasses
+
+    annotated = [
+        dataclasses.replace(
+            s,
+            transfer_cycles=_segment_transfer(
+                graph, s.nodes, modmap[s.module], mod_of, target, modmap
+            ),
+        )
+        for s in segments
+    ]
+    return MappedGraph(graph, target, annotated, attrs={"policy": "greedy"})
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def dispatch(
+    graph: Graph,
+    target: MatchTarget,
+    *,
+    budget: int = 4000,
+    policy: str = "dp",
+    beam: int = 12,
+    planner: SchedulePlanner | None = None,
+    cache_path=None,
+    verbose: bool = False,
+) -> MappedGraph:
+    """Partition ``graph`` across ``target``'s execution modules.
+
+    ``policy="dp"`` (default) runs the transfer-aware DP partitioner;
+    ``policy="greedy"`` keeps the legacy largest-match walk as a baseline.
+    ``planner`` / ``cache_path`` control schedule batching and the
+    persistent DSE cache (see :class:`~repro.core.loma.SchedulePlanner`).
+    """
+    if policy == "greedy":
+        if planner is not None or cache_path is not None:
+            raise ValueError(
+                "policy='greedy' searches serially and does not use the "
+                "schedule planner; drop planner=/cache_path= (DP only)"
+            )
+        return _dispatch_greedy(graph, target, budget, verbose)
+    if policy != "dp":
+        raise ValueError(f"unknown dispatch policy {policy!r}")
+    if planner is not None and cache_path is not None:
+        raise ValueError(
+            "pass either planner= (already bound to its cache file) or "
+            "cache_path= (a planner is created for you), not both"
+        )
+    if planner is None:
+        planner = SchedulePlanner(cache_path=cache_path)
+    return _dispatch_dp(graph, target, planner, budget, beam, verbose)

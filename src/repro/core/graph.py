@@ -41,6 +41,26 @@ class Node:
         a.update(kw)
         return replace(self, attrs=a)
 
+    # -- output tensor sizing (used to size cross-module transfers) -----
+    def output_elems(self) -> int:
+        """Elements of this node's output tensor, from geometry attrs.
+
+        Convs/denses produce B x K x OY x OX; depthwise convs, pools and
+        elementwise ops keep the channel count C; nodes without geometry
+        (structural ops) report 1 element so they never dominate a
+        transfer estimate.
+        """
+        b = int(self.attr("B", 1) or 1)
+        ch = int(self.attr("K", 0) or 0)
+        if self.op in ("dwconv2d", "avgpool", "maxpool") or not ch:
+            ch = int(self.attr("C", 1) or 1)
+        oy = int(self.attr("OY", 1) or 1)
+        ox = int(self.attr("OX", 1) or 1)
+        return max(1, b * ch * oy * ox)
+
+    def output_bytes(self) -> int:
+        return self.output_elems() * int(self.attr("elem_bytes", 1) or 1)
+
 
 @dataclass
 class Graph:
@@ -63,6 +83,14 @@ class Graph:
 
     def consumers(self, name: str) -> list[Node]:
         return [n for n in self.nodes if name in n.inputs]
+
+    def edge_bytes(self, producer: str) -> int:
+        """Bytes flowing along the edge out of the ``producer`` node,
+        sized from its geometry attrs.  Graph inputs return 0: they start
+        in the shared home memory, so no cross-module transfer is due."""
+        if self.has(producer):
+            return self.node(producer).output_bytes()
+        return 0
 
     def single_consumer(self, name: str) -> Node | None:
         cs = self.consumers(name)

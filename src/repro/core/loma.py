@@ -19,14 +19,29 @@ plus the 2x L1 footprint charge — both paper extensions to ZigZag.
 The search is exhaustive up to a candidate ``budget``; above it, tile
 candidates are subsampled deterministically, preferring spatial-unrolling
 aligned sizes (the MXU wants multiples of 128, DIANA of 16).
+
+Two caching layers sit in front of the search:
+
+* a process-wide in-memory cache keyed by the name-agnostic geometry
+  :func:`_workload_key` (identical layers share one search), and
+* :class:`SchedulePlanner` — the batched front-end the DP dispatcher
+  uses: it collects every (workload, module) query of a compile, dedupes
+  them, evaluates misses through a ``concurrent.futures`` thread pool,
+  and optionally persists results to a JSON file so a second compile of
+  the same network never runs LOMA at all.
 """
 
 from __future__ import annotations
 
 import itertools
+import json
 import math
-from dataclasses import dataclass, field
+import os
+import uuid
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field, replace
 from functools import lru_cache
+from pathlib import Path
 from typing import Iterable, Mapping, Sequence
 
 from .cost_model import INFEASIBLE, CostBreakdown, evaluate_mapping
@@ -36,6 +51,7 @@ from .workload import Workload, prod
 __all__ = [
     "TemporalMapping",
     "ScheduleResult",
+    "SchedulePlanner",
     "prime_factors",
     "divisors",
     "tile_candidates",
@@ -209,14 +225,91 @@ def clear_schedule_cache() -> None:
     _SCHEDULE_CACHE.clear()
 
 
-def _workload_key(workload: Workload, module: ExecutionModule) -> tuple:
+_OPAQUE_FN_COUNTER = itertools.count()
+# Salting the counter with a per-process UUID guarantees an opaque-closure
+# key can never match one persisted by another process: the disk cache
+# *misses* and re-searches rather than risking a stale schedule.
+_OPAQUE_FN_SALT = uuid.uuid4().hex
+
+
+def _opaque_fn_token(fn) -> str:
+    """Process-unique, never-recycled token for a callable whose closure
+    cannot be keyed by value.  Stored on the function object itself so the
+    same callable always maps to the same token while it is alive."""
+    tok = getattr(fn, "_match_cache_token", None)
+    if tok is None:
+        tok = f"{_OPAQUE_FN_SALT}:{next(_OPAQUE_FN_COUNTER)}"
+        try:
+            fn._match_cache_token = tok
+        except (AttributeError, TypeError):
+            pass  # unsettable callables fall back to a fresh token per call
+    return tok
+
+
+def _callable_token(fn) -> tuple | None:
+    """Stable-ish identity for a cost-model callable (custom/constraint).
+
+    Qualified name + defaults + primitive closure-cell values distinguish
+    the common cases (lambdas parameterised via defaults or closed-over
+    constants) across processes.  An opaque closure cell falls back to the
+    object id, which makes the key process-unique: the disk cache then
+    *misses* and re-searches instead of serving a stale schedule.
+    """
+    if fn is None:
+        return None
+    cells = []
+    for cell in fn.__closure__ or ():
+        v = cell.cell_contents
+        if isinstance(v, (int, float, str, bool, bytes, tuple, frozenset, type(None))):
+            cells.append(repr(v))
+        else:
+            # opaque value: tag the *function* with a never-reused token
+            # (id() could alias a GC'd callable's address within a process)
+            cells.append(f"opaque:{_opaque_fn_token(fn)}")
     return (
-        workload.name,
+        getattr(fn, "__module__", ""),
+        getattr(fn, "__qualname__", repr(fn)),
+        repr(getattr(fn, "__defaults__", None)),
+        tuple(cells),
+    )
+
+
+def _workload_key(workload: Workload, module: ExecutionModule) -> tuple:
+    """Geometry key for one (workload, module) DSE query.
+
+    Deliberately excludes the workload *name* so identical layers (the
+    repeated blocks of MobileNet/DSCNN) collapse to one search, and
+    includes everything the cost model actually reads: loop nest, operand
+    shapes/layouts, cost-relevant attrs, and the module's memory, compute
+    and spatial-unrolling constants (custom compute / constraint
+    callables are keyed via :func:`_callable_token`).
+    """
+    su = module.spatial_for(workload)
+    cm = module.compute
+    cost_attrs = tuple(
+        sorted(
+            (k, str(workload.attrs[k]))
+            for k in ("stride", "sequential", "causal", "state", "depthwise")
+            if k in workload.attrs
+        )
+    )
+    return (
         workload.op_type,
         tuple((l.name, l.size, l.kind) for l in workload.loops),
-        tuple((o.name, o.elem_bytes, o.dims) for o in workload.operands),
+        tuple(
+            (o.name, o.elem_bytes, o.dims, o.layout, o.is_output) for o in workload.operands
+        ),
+        float(workload.macs_per_iter),
+        cost_attrs,
         module.name,
-        tuple((m.name, m.size_bytes, m.bandwidth, m.chunk_overhead) for m in module.memories),
+        tuple(
+            (m.name, m.size_bytes, m.bandwidth, m.chunk_overhead, m.serves)
+            for m in module.memories
+        ),
+        tuple(sorted(su.dims.items())),
+        (cm.cycles_per_iter, cm.output_elem_overhead, cm.macs_per_pe_cycle, cm.fixed_setup_cycles),
+        _callable_token(cm.custom),
+        _callable_token(module.constraint),
         module.async_dma,
         module.double_buffer,
     )
@@ -236,9 +329,16 @@ def search_schedule(
     Returns an infeasible :class:`ScheduleResult` when no tile fits the
     module's L1 (the dispatcher then falls back — paper: offload to CPU).
     """
-    key = _workload_key(workload, module)
+    # budget participates in the key: a low-budget result must never be
+    # served (or persisted by a SchedulePlanner) for a high-budget query
+    key = (_workload_key(workload, module), int(budget))
     if use_cache and key in _SCHEDULE_CACHE:
-        return _SCHEDULE_CACHE[key]
+        hit = _SCHEDULE_CACHE[key]
+        # the key is name-agnostic (identical layers share one search):
+        # restamp the result with this query's workload name
+        if hit.workload_name != workload.name:
+            hit = replace(hit, workload_name=workload.name)
+        return hit
 
     if not module.supports(workload):
         res = ScheduleResult(workload.name, module.name, TemporalMapping({}, ()), INFEASIBLE, 0)
@@ -356,3 +456,174 @@ class _SearchState:
             self.best_cost,
             self.n_eval,
         )
+
+
+# ---------------------------------------------------------------------------
+# Batched, persistently cached DSE front-end (used by the DP dispatcher)
+# ---------------------------------------------------------------------------
+
+
+def _serialize_result(res: ScheduleResult) -> dict:
+    c = res.cost
+
+    def num(x):
+        return None if math.isinf(x) else x
+
+    return {
+        "workload_name": res.workload_name,
+        "module_name": res.module_name,
+        "tiles": dict(res.mapping.tiles),
+        "outer_order": list(res.mapping.outer_order),
+        "feasible": c.feasible,
+        "latency_cycles": num(c.latency_cycles),
+        "l_ops": num(c.l_ops),
+        "l_mem": num(c.l_mem),
+        "traffic_bytes": dict(c.traffic_bytes),
+        "dma_chunks": dict(c.dma_chunks),
+        "utilization": c.utilization,
+        "reason": c.reason,
+        "candidates_evaluated": res.candidates_evaluated,
+    }
+
+
+def _deserialize_result(d: dict) -> ScheduleResult:
+    def num(x):
+        return math.inf if x is None else float(x)
+
+    cost = CostBreakdown(
+        feasible=bool(d["feasible"]),
+        latency_cycles=num(d["latency_cycles"]),
+        l_ops=num(d["l_ops"]),
+        l_mem=num(d["l_mem"]),
+        traffic_bytes=dict(d.get("traffic_bytes", {})),
+        dma_chunks=dict(d.get("dma_chunks", {})),
+        utilization=float(d.get("utilization", 0.0)),
+        reason=str(d.get("reason", "")),
+    )
+    mapping = TemporalMapping(
+        {k: int(v) for k, v in d.get("tiles", {}).items()},
+        tuple(d.get("outer_order", ())),
+    )
+    return ScheduleResult(
+        d["workload_name"],
+        d["module_name"],
+        mapping,
+        cost,
+        int(d.get("candidates_evaluated", 0)),
+    )
+
+
+class SchedulePlanner:
+    """Collects DSE queries, dedupes, evaluates in a pool, caches on disk.
+
+    The DP dispatcher enumerates *every* candidate (segment, module) pair
+    up front instead of searching serially per node.  The planner:
+
+    1. dedupes queries by the geometry :func:`_workload_key` (identical
+       layers of a network — or of two networks — share one search; this
+       dedup is where the cold-compile win comes from),
+    2. evaluates the unique misses through a bounded
+       ``concurrent.futures`` thread pool (:meth:`flush`) — note the
+       analytic search is pure-Python and GIL-bound, so the pool bounds
+       latency spikes rather than multiplying throughput,
+    3. optionally persists results to a JSON file so a second compile of
+       the same network skips the LOMA search entirely (warm-cache
+       dispatch is pure dictionary lookups).
+
+    ``cache_path=None`` keeps the planner purely in-memory; the
+    ``MATCH_SCHEDULE_CACHE`` environment variable supplies a default path
+    when set.
+    """
+
+    def __init__(
+        self,
+        cache_path: str | os.PathLike | None = None,
+        max_workers: int | None = None,
+    ):
+        if cache_path is None:
+            cache_path = os.environ.get("MATCH_SCHEDULE_CACHE") or None
+        self.cache_path = Path(cache_path).expanduser() if cache_path else None
+        self.max_workers = max_workers or min(8, os.cpu_count() or 1)
+        self._results: dict[str, ScheduleResult] = {}
+        self._pending: dict[str, tuple[Workload, ExecutionModule, int]] = {}
+        self.stats = {"requests": 0, "deduped": 0, "hits": 0, "disk_hits": 0, "searched": 0}
+        self._dirty = False
+        if self.cache_path is not None and self.cache_path.exists():
+            try:
+                raw = json.loads(self.cache_path.read_text())
+                self._results = {k: _deserialize_result(v) for k, v in raw.items()}
+            except (OSError, ValueError, KeyError, TypeError, AttributeError):
+                self._results = {}  # malformed cache: discard, re-search
+        # distinguish true disk hits from same-planner in-memory hits
+        self._from_disk = set(self._results)
+
+    # Bump when evaluate_mapping / the traffic model / the search change
+    # semantically: persisted entries from older cost models must miss.
+    CACHE_VERSION = 1
+
+    @staticmethod
+    def _key(workload: Workload, module: ExecutionModule, budget: int) -> str:
+        return repr((SchedulePlanner.CACHE_VERSION, _workload_key(workload, module), int(budget)))
+
+    def request(self, workload: Workload, module: ExecutionModule, *, budget: int = 4000) -> str:
+        """Register one (workload, module) query; returns its cache key."""
+        key = self._key(workload, module, budget)
+        self.stats["requests"] += 1
+        if key in self._results:
+            self.stats["hits"] += 1
+            if key in self._from_disk:
+                self.stats["disk_hits"] += 1
+        elif key in self._pending:
+            self.stats["deduped"] += 1
+        else:
+            self._pending[key] = (workload, module, budget)
+        return key
+
+    def flush(self) -> None:
+        """Evaluate all pending unique queries through the thread pool."""
+        if not self._pending:
+            return
+        items = list(self._pending.items())
+        self._pending.clear()
+
+        def run(item):
+            key, (wl, mod, budget) = item
+            return key, search_schedule(wl, mod, budget=budget)
+
+        if len(items) == 1:
+            done = [run(items[0])]
+        else:
+            with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
+                done = list(pool.map(run, items))
+        for key, res in done:
+            self._results[key] = res
+            self.stats["searched"] += 1
+        self._dirty = True
+        self.save()
+
+    def get(self, workload: Workload, module: ExecutionModule, *, budget: int = 4000) -> ScheduleResult:
+        """Result for a query (flushing pending work if necessary)."""
+        key = self._key(workload, module, budget)
+        if key not in self._results:
+            if key in self._pending:
+                self.flush()
+            else:
+                self.request(workload, module, budget=budget)
+                self.flush()
+        res = self._results[key]
+        if res.workload_name != workload.name:
+            res = replace(res, workload_name=workload.name)
+        return res
+
+    def save(self) -> None:
+        if self.cache_path is None or not self._dirty:
+            return
+        try:
+            self.cache_path.parent.mkdir(parents=True, exist_ok=True)
+            payload = {k: _serialize_result(v) for k, v in self._results.items()}
+            tmp = self.cache_path.with_suffix(".tmp")
+            tmp.write_text(json.dumps(payload))
+            tmp.replace(self.cache_path)
+            self._dirty = False
+        except OSError:
+            pass  # cache is an optimisation; never fail a compile over it

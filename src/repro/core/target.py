@@ -26,6 +26,7 @@ __all__ = [
     "SpatialUnrolling",
     "ComputeModel",
     "ExecutionModule",
+    "Interconnect",
     "MatchTarget",
 ]
 
@@ -105,6 +106,25 @@ class ComputeModel:
     custom: Callable[[Workload, Mapping[str, int], "ExecutionModule"], float] | None = None
 
 
+@dataclass(frozen=True)
+class Interconnect:
+    """Cross-module data path of a MatchTarget (transfer-cost model).
+
+    When two consecutive graph segments land on *different* execution
+    modules, the producer's activations must complete a round trip through
+    the shared home level (L2 on the MCUs, HBM on the TPU) before the
+    consumer can start: the intra-segment double-buffering credit does not
+    survive a module switch.  ``bandwidth`` is the bytes/cycle of that
+    shared path; ``hop_latency`` is the fixed synchronisation cost of the
+    handoff (DMA reprogramming, cluster fork/join, accelerator job setup)
+    paid once per cross-module edge, on top of each module's own
+    ``handoff_cycles``.
+    """
+
+    bandwidth: float = 8.0  # bytes/cycle through the shared home memory
+    hop_latency: float = 100.0  # fixed cycles per cross-module handoff
+
+
 @dataclass
 class ExecutionModule:
     """One HW execution module of a MatchTarget (paper Fig. 4)."""
@@ -122,6 +142,10 @@ class ExecutionModule:
     # Constraints: f(workload) -> bool, module-wide (on top of per-pattern)
     constraint: Callable[[Workload], bool] | None = None
     frequency_hz: float = 260e6  # paper experimental setup: 260 MHz
+    # Fixed cycles to hand control to / flush this module at a segment
+    # boundary where the *other* end of the edge is a different module
+    # (NE16 job registers, cluster fork/join, cache flush on the CPU).
+    handoff_cycles: float = 0.0
     attrs: dict = field(default_factory=dict)
 
     # -- helpers --------------------------------------------------------
@@ -157,6 +181,7 @@ class MatchTarget:
     name: str
     modules: list[ExecutionModule]
     fallback: ExecutionModule
+    interconnect: Interconnect = field(default_factory=Interconnect)
     attrs: dict = field(default_factory=dict)
 
     def all_modules(self) -> list[ExecutionModule]:
@@ -176,6 +201,7 @@ class MatchTarget:
             name=f"{self.name}[{'+'.join(module_names) or 'cpu'}]",
             modules=mods,
             fallback=self.fallback,
+            interconnect=self.interconnect,
             attrs=dict(self.attrs),
         )
 
@@ -197,5 +223,6 @@ class MatchTarget:
             name=f"{self.name}[L1={l1_bytes//1024}kB]",
             modules=[scale(m) for m in self.modules],
             fallback=self.fallback,
+            interconnect=self.interconnect,
             attrs=dict(self.attrs),
         )

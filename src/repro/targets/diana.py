@@ -23,6 +23,7 @@ from __future__ import annotations
 from repro.core import (
     ComputeModel,
     ExecutionModule,
+    Interconnect,
     MatchTarget,
     MemoryLevel,
     SpatialUnrolling,
@@ -95,6 +96,7 @@ def make_diana_target() -> MatchTarget:
         double_buffer=False,
         supported_ops=("conv2d", "dwconv2d", "dense"),
         frequency_hz=FREQ_HZ,
+        handoff_cycles=CHUNK_OVERHEAD,  # DMA reprogram on a module switch
     )
     accel.patterns = [
         conv_chain_pattern("conv_bias_requant", ("bias_add", "requant"), _int8_constraint),
@@ -112,5 +114,8 @@ def make_diana_target() -> MatchTarget:
         name="diana",
         modules=[accel],
         fallback=_diana_cpu(),
+        # accelerator <-> CPU handoffs round-trip activations through the
+        # 512 kB L2 over the 64-bit AXI; DMA is blocking on DIANA.
+        interconnect=Interconnect(bandwidth=DMA_BW, hop_latency=CHUNK_OVERHEAD),
         attrs={"frequency_hz": FREQ_HZ},
     )

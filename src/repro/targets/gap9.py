@@ -24,6 +24,7 @@ from __future__ import annotations
 from repro.core import (
     ComputeModel,
     ExecutionModule,
+    Interconnect,
     MatchTarget,
     MemoryLevel,
     SpatialUnrolling,
@@ -100,6 +101,7 @@ def make_gap9_target() -> MatchTarget:
         double_buffer=True,
         supported_ops=("conv2d", "dwconv2d", "dense", "elementwise", "pool"),
         frequency_hz=FREQ_HZ,
+        handoff_cycles=100.0,  # cluster fork/join around an offloaded segment
     )
     cluster.patterns = [
         conv_chain_pattern("cl_conv_bias_requant_relu", ("bias_add", "requant", "relu"), _int8),
@@ -140,6 +142,7 @@ def make_gap9_target() -> MatchTarget:
         double_buffer=True,
         supported_ops=("conv2d", "dwconv2d"),
         frequency_hz=FREQ_HZ,
+        handoff_cycles=100.0,  # NE16 job-register reprogram at a boundary
     )
     ne16.patterns = [
         conv_chain_pattern("ne16_conv_bias_requant_relu", ("bias_add", "requant", "relu"), _ne16_conv_ok),
@@ -155,5 +158,8 @@ def make_gap9_target() -> MatchTarget:
         name="gap9",
         modules=[cluster, ne16],
         fallback=_gap9_cpu(),
+        # Cluster and NE16 share L1/L2, so a module switch costs one DMA
+        # round on the shared path plus the per-chunk sync overhead.
+        interconnect=Interconnect(bandwidth=DMA_BW, hop_latency=CHUNK_OVERHEAD),
         attrs={"frequency_hz": FREQ_HZ},
     )

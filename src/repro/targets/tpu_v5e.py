@@ -27,6 +27,7 @@ from dataclasses import dataclass
 from repro.core import (
     ComputeModel,
     ExecutionModule,
+    Interconnect,
     MatchTarget,
     MemoryLevel,
     SpatialUnrolling,
@@ -143,6 +144,7 @@ def make_tpu_v5e_target(spec: TPUv5eSpec = V5E) -> MatchTarget:
         double_buffer=True,
         supported_ops=("matmul", "attention", "conv2d", "dense"),
         frequency_hz=spec.clock_hz,
+        handoff_cycles=500.0,  # kernel relaunch: VMEM windows re-established
     )
 
     # VPU: 8x128 vector lanes; elementwise + recurrences (scans).
@@ -160,6 +162,7 @@ def make_tpu_v5e_target(spec: TPUv5eSpec = V5E) -> MatchTarget:
         double_buffer=True,
         supported_ops=("scan", "elementwise", "pool"),
         frequency_hz=spec.clock_hz,
+        handoff_cycles=500.0,
         attrs={"flops_per_cycle": vpu_flops},
     )
 
@@ -191,7 +194,15 @@ def make_tpu_v5e_target(spec: TPUv5eSpec = V5E) -> MatchTarget:
         frequency_hz=spec.clock_hz,
     )
 
-    target = MatchTarget(name="tpu_v5e", modules=[mxu, vpu], fallback=xla, attrs={"spec": spec})
+    target = MatchTarget(
+        name="tpu_v5e",
+        modules=[mxu, vpu],
+        fallback=xla,
+        # a module switch breaks kernel fusion: the edge's activations
+        # round-trip HBM at full bandwidth plus a dispatch-latency hop
+        interconnect=Interconnect(bandwidth=hbm_bpc, hop_latency=500.0),
+        attrs={"spec": spec},
+    )
 
     # Pattern tables for the LM hot-spots are registered by repro.kernels
     # (each kernel contributes its pattern + workload builder), keeping the

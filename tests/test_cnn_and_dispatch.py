@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.cnn import execute_graph, init_graph_params, mlperf_tiny_networks, conv_block_graph

@@ -1,6 +1,7 @@
 """Analytical cost model: stationarity, chunking, rank preservation."""
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -1,0 +1,230 @@
+"""DP graph partitioner: transfer-aware optimality, coverage, caching.
+
+These tests need no hypothesis — they must always collect, since they
+guard the dispatch contract every benchmark and example relies on.
+"""
+
+import math
+
+import pytest
+
+from repro.cnn import mlperf_tiny_networks, resnet8_graph
+from repro.core import (
+    ComputeModel,
+    ExecutionModule,
+    Graph,
+    Interconnect,
+    MatchTarget,
+    MemoryLevel,
+    Node,
+    SchedulePlanner,
+    SpatialUnrolling,
+    clear_schedule_cache,
+    dispatch,
+    transfer_cost,
+)
+from repro.core.patterns import conv_chain_pattern, eltwise_chain_pattern
+from repro.targets import make_gap9_target
+
+
+@pytest.fixture(autouse=True)
+def _no_env_schedule_cache(monkeypatch):
+    """Keep planner stats/results hermetic: a MATCH_SCHEDULE_CACHE set in
+    the environment would pre-populate every default SchedulePlanner."""
+    monkeypatch.delenv("MATCH_SCHEDULE_CACHE", raising=False)
+
+
+# ---------------------------------------------------------------------------
+# Toy two-module target where greedy provably loses to the DP
+# ---------------------------------------------------------------------------
+
+
+def _toy_module(name: str, conv_cycles: float, elt_cycles: float) -> ExecutionModule:
+    """Constant-cost module: latency is pinned by a custom compute model so
+    the test controls the numbers exactly (huge L1 + bandwidth => L_mem~0)."""
+    mod = ExecutionModule(
+        name=name,
+        memories=(
+            MemoryLevel("L1", 1 << 20, 1e9),
+            MemoryLevel("L2", 1 << 24, 1e9),
+        ),
+        spatial={"*": SpatialUnrolling({})},
+        compute=ComputeModel(
+            custom=lambda w, t, m, c=conv_cycles, e=elt_cycles: (
+                c if w.op_type == "conv2d" else e
+            )
+        ),
+        async_dma=True,
+        double_buffer=False,
+        supported_ops=("conv2d", "elementwise"),
+    )
+    mod.patterns = [
+        conv_chain_pattern(f"{name}_conv", ()),
+        eltwise_chain_pattern(f"{name}_requant", "requant"),
+    ]
+    return mod
+
+
+def _toy_target(hop_latency: float = 100.0) -> MatchTarget:
+    # module A is the fastest conv engine, module B the fastest requant
+    # engine: a transfer-blind argmin ping-pongs A-B-A-B across the chain.
+    a = _toy_module("A", conv_cycles=80.0, elt_cycles=100.0)
+    b = _toy_module("B", conv_cycles=100.0, elt_cycles=80.0)
+    cpu = _toy_module("cpu", conv_cycles=10_000.0, elt_cycles=10_000.0)
+    cpu.patterns = []
+    return MatchTarget(
+        name="toy",
+        modules=[a, b],
+        fallback=cpu,
+        interconnect=Interconnect(bandwidth=1.0, hop_latency=hop_latency),
+    )
+
+
+def _chain_graph() -> Graph:
+    geom = {"B": 1, "K": 4, "C": 4, "OY": 4, "OX": 4, "FY": 1, "FX": 1, "elem_bytes": 1}
+    nodes = [
+        Node("c1", "conv2d", ("x",), geom),
+        Node("q1", "requant", ("c1",), geom),
+        Node("c2", "conv2d", ("q1",), geom),
+        Node("q2", "requant", ("c2",), geom),
+    ]
+    return Graph("chain4", nodes, {"x": (1, 4, 4, 4)}, ("q2",))
+
+
+def test_greedy_ping_pongs_dp_stays_put():
+    """The hand-built 4-node chain: greedy (per-segment argmin, transfer
+    blind) alternates modules and pays three L2 round trips; the DP sees
+    the transfer prices and keeps the whole chain on one module."""
+    g = _chain_graph()
+    tgt = _toy_target()
+
+    greedy = dispatch(g, tgt, policy="greedy")
+    assert [s.module for s in greedy.segments] == ["A", "B", "A", "B"]
+    # 4 x 80 compute + 3 transfers of 64 B over 1 B/cyc + 100 fixed
+    assert greedy.total_cycles() == pytest.approx(4 * 80 + 3 * (100 + 64))
+
+    dp = dispatch(g, tgt)
+    assert len({s.module for s in dp.segments}) == 1  # single module
+    assert dp.transfer_cycles() == 0.0
+    assert dp.total_cycles() == pytest.approx(2 * 80 + 2 * 100)
+    assert dp.total_cycles() < greedy.total_cycles()
+
+
+def test_dp_switches_when_transfers_are_free():
+    """With a free interconnect the DP recovers the per-segment argmin."""
+    g = _chain_graph()
+    tgt = _toy_target()
+    tgt.interconnect = Interconnect(bandwidth=1e12, hop_latency=0.0)
+    dp = dispatch(g, tgt)
+    assert [s.module for s in dp.segments] == ["A", "B", "A", "B"]
+    assert dp.total_cycles() == pytest.approx(4 * 80)
+
+
+def test_transfer_cost_model_basics():
+    tgt = _toy_target()
+    a, b = tgt.modules
+    assert transfer_cost(1000, a, a, tgt.interconnect) == 0.0
+    both_async = transfer_cost(1000, a, b, tgt.interconnect)
+    assert both_async == pytest.approx(100 + 1000 / 1.0)
+    # a blocking producer exposes the write-back too: twice the bytes
+    import dataclasses
+
+    sync_a = dataclasses.replace(a, spatial=a.spatial)
+    sync_a.async_dma = False
+    assert transfer_cost(1000, sync_a, b, tgt.interconnect) == pytest.approx(100 + 2000)
+
+
+def test_structural_ops_are_transfer_transparent():
+    """A zero-cost structural node (reshape) between two same-module convs
+    must not be pinned to the CPU and priced with phantom transfers."""
+    geom = {"B": 1, "K": 4, "C": 4, "OY": 4, "OX": 4, "FY": 1, "FX": 1, "elem_bytes": 1}
+    nodes = [
+        Node("c1", "conv2d", ("x",), geom),
+        Node("rs", "reshape", ("c1",), geom),
+        Node("c2", "conv2d", ("rs",), geom),
+    ]
+    g = Graph("structural", nodes, {"x": (1, 4, 4, 4)}, ("c2",))
+    dp = dispatch(g, _toy_target())
+    assert dp.transfer_cycles() == 0.0
+    assert len({s.module for s in dp.segments}) == 1
+    assert dp.total_cycles() == pytest.approx(2 * 80)
+
+
+# ---------------------------------------------------------------------------
+# Real networks: coverage + DP never worse than greedy
+# ---------------------------------------------------------------------------
+
+
+def test_resnet_dispatch_covers_every_node_exactly_once():
+    g = resnet8_graph()
+    mg = dispatch(g, make_gap9_target())
+    covered = [n.name for s in mg.segments for n in s.nodes]
+    assert sorted(covered) == sorted(n.name for n in g.nodes)
+    assert len(covered) == len(set(covered))
+
+
+def test_dp_beats_or_matches_greedy_on_all_nets():
+    tgt = make_gap9_target()
+    for name, g in mlperf_tiny_networks().items():
+        clear_schedule_cache()
+        dp = dispatch(g, tgt)
+        clear_schedule_cache()
+        greedy = dispatch(g, tgt, policy="greedy")
+        assert dp.total_cycles() <= greedy.total_cycles() + 1e-6, name
+
+
+# ---------------------------------------------------------------------------
+# SchedulePlanner: dedup + persistent warm cache
+# ---------------------------------------------------------------------------
+
+
+def test_planner_dedupes_identical_layers():
+    g = resnet8_graph()
+    planner = SchedulePlanner()
+    dispatch(g, make_gap9_target(), planner=planner)
+    # ResNet has several identically-shaped convs/adds: dedup must fire
+    assert planner.stats["deduped"] > 0
+    assert planner.stats["searched"] < planner.stats["requests"]
+
+
+def test_planner_persistent_cache_roundtrip(tmp_path):
+    cache = tmp_path / "schedules.json"
+    g = resnet8_graph()
+
+    clear_schedule_cache()
+    cold = SchedulePlanner(cache_path=cache)
+    mg_cold = dispatch(g, make_gap9_target(), planner=cold)
+    assert cache.exists()
+    assert cold.stats["searched"] > 0
+
+    clear_schedule_cache()  # wipe the in-memory DSE cache: disk must serve
+    warm = SchedulePlanner(cache_path=cache)
+    mg_warm = dispatch(g, make_gap9_target(), planner=warm)
+    assert warm.stats["searched"] == 0
+    assert warm.stats["disk_hits"] > 0
+    assert mg_warm.total_cycles() == pytest.approx(mg_cold.total_cycles())
+    assert [s.module for s in mg_warm.segments] == [s.module for s in mg_cold.segments]
+
+
+@pytest.mark.parametrize("payload", ["{not json", "[]", '{"k": "notadict"}'])
+def test_planner_survives_corrupt_cache(tmp_path, payload):
+    cache = tmp_path / "schedules.json"
+    cache.write_text(payload)
+    planner = SchedulePlanner(cache_path=cache)
+    mg = dispatch(resnet8_graph(), make_gap9_target(), planner=planner)
+    assert mg.total_cycles() > 0 and math.isfinite(mg.total_cycles())
+
+
+def test_schedule_cache_distinguishes_custom_cost_models():
+    """Two same-named modules differing only in their custom compute
+    callable must not share a cached ScheduleResult."""
+    from repro.core import dense_workload, search_schedule
+
+    fast = _toy_module("same", conv_cycles=80.0, elt_cycles=80.0)
+    slow = _toy_module("same", conv_cycles=5000.0, elt_cycles=5000.0)
+    w = dense_workload(B=1, K=4, C=4)
+    fast.supported_ops = ("dense",)
+    slow.supported_ops = ("dense",)
+    a = search_schedule(w, fast).latency_cycles
+    b = search_schedule(w, slow).latency_cycles
+    assert a != b

@@ -10,8 +10,9 @@ from repro.configs import ALL_ARCHS, SHAPES, get_config
 from repro.distributed.autoshard import best_rules, candidate_rules, predict_cell
 from repro.distributed.sharding import ShardingRules, constrain, use_rules
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# jax's AbstractMesh takes one ((name, size), ...) shape tuple
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+MESH3 = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def test_spec_for_basic():

@@ -89,6 +89,8 @@ with use_rules(rules), mesh:
     step = make_train_step(model, OptConfig())
     compiled = jax.jit(step, donate_argnums=(0,1)).lower(pspecs, opt, batch).compile()
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax returns one dict per device
+        ca = ca[0] if ca else {}
     assert ca.get("flops", 0) > 0
 print("MULTIDEV_OK", name)
 """
