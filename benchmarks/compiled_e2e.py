@@ -1,0 +1,103 @@
+"""Compiled vs interpreted end-to-end execution (backend subsystem, PR 2).
+
+For each MLPerf-Tiny network on GAP9:
+
+* dispatch + lower into fused, memory-planned segment executors,
+* golden-check the compiled model bit-exact against the interpreter,
+* wall-clock both paths (after one warmup each, so jit compile time is
+  excluded) and report the speedup of fused segment executors over the
+  per-op interpreter,
+* record the memory-plan arena numbers.
+
+Emits the usual CSV rows plus one JSON summary line (``compiled_e2e
+JSON: {...}``) and writes ``compiled_e2e.json`` for the bench trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.backend import lower
+from repro.cnn import execute_graph, init_graph_params, mlperf_tiny_networks
+from repro.core import dispatch
+from repro.targets import make_gap9_target
+
+from .common import emit, timed
+
+
+def run(out_path: str | None = "compiled_e2e.json") -> list[str]:
+    rows = []
+    summary: dict[str, dict] = {}
+    tgt = make_gap9_target()
+
+    for name, g in mlperf_tiny_networks().items():
+        params = init_graph_params(g)
+        x = {
+            k: np.random.default_rng(0).integers(-128, 128, s).astype("float32")
+            for k, s in g.inputs.items()
+        }
+
+        mapped = dispatch(g, tgt, budget=500)
+        # HW-faithful fidelity: L1-stripe conv bands + Pallas int8 GEMM
+        compiled, lower_us = timed(lower, mapped)
+        # fused fidelity: same segments + memory plan, fastest host path
+        fused = lower(mapped, use_pallas=False, band_tiling=False)
+        max_err = max(compiled.verify(params, x), fused.verify(params, x))
+
+        def run_interp():
+            return jax.block_until_ready(list(execute_graph(g, params, x).values()))
+
+        def run_compiled():
+            return jax.block_until_ready(list(compiled.run(params, x).values()))
+
+        def run_fused():
+            return jax.block_until_ready(list(fused.run(params, x).values()))
+
+        run_interp(), run_compiled(), run_fused()  # warmup (jit compile excluded)
+        _, interp_us = timed(run_interp, repeats=3)
+        _, compiled_us = timed(run_compiled, repeats=3)
+        _, fused_us = timed(run_fused, repeats=3)
+
+        plan = compiled.memory_plan
+        speedup = interp_us / max(fused_us, 1e-9)
+        summary[name] = {
+            "bit_exact": max_err == 0.0,
+            "max_abs_err": max_err,
+            "interp_us": interp_us,
+            "compiled_us": compiled_us,
+            "fused_us": fused_us,
+            "fused_speedup": speedup,
+            "lower_us": lower_us,
+            "segments": len(compiled.segments),
+            "routes": compiled.routes(),
+            "arena_bytes": dict(plan.arena_bytes),
+            "plan_fits": plan.fits,
+        }
+        rows.append(
+            emit(
+                f"compiled_e2e_{name}",
+                fused_us,
+                f"interp_us={interp_us:.1f};faithful_us={compiled_us:.1f};"
+                f"fused_speedup={speedup:.2f}x;bit_exact={max_err == 0.0};"
+                f"segments={len(compiled.segments)};"
+                f"arena_{plan.home_level}={plan.arena_bytes.get(plan.home_level, 0)}",
+            )
+        )
+        if max_err != 0.0 or not plan.fits:
+            raise AssertionError(
+                f"{name}: compiled path diverged (err={max_err}) or plan overflow"
+            )
+
+    payload = json.dumps(summary, indent=2, sort_keys=True)
+    print(f"compiled_e2e JSON: {json.dumps(summary, sort_keys=True)}", flush=True)
+    if out_path:
+        Path(out_path).write_text(payload)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

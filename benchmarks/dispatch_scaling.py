@@ -56,6 +56,7 @@ def run(out_path: str | None = "dispatch_scaling.json") -> list[str]:
         summary[name] = {
             "dp_pred_ms": dp_ms,
             "greedy_pred_ms": greedy_ms,
+            "greedy_dispatch_us": greedy_us,
             "dp_transfer_cycles": cold_mg.transfer_cycles(),
             "greedy_transfer_cycles": greedy_mg.transfer_cycles(),
             "cold_dispatch_us": cold_us,

@@ -17,6 +17,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (
+        compiled_e2e,
         dispatch_scaling,
         fig7_diana_micro,
         fig8_gap9_micro,
@@ -36,6 +37,7 @@ def main() -> None:
         "fig9_10": fig9_10_l1_scaling,
         "fig11": fig11_resnet_mapping,
         "dispatch_scaling": dispatch_scaling,
+        "compiled_e2e": compiled_e2e,
         "tpu_kernels": tpu_kernel_schedules,
         "pod_roofline": pod_roofline_summary,
     }

@@ -1,6 +1,7 @@
 """Paper-faithful compilation example: the DIANA/GAP9 MATCH flow with
-transformations, dispatch, execution and per-module breakdown — plus the
-Fig. 9-style L1 ablation on one network.
+transformations, dispatch, backend lowering + static memory planning,
+bit-exact execution and per-module breakdown — plus the Fig. 9-style L1
+ablation on one network.
 
   PYTHONPATH=src python examples/compile_cnn_match.py
 """
@@ -12,7 +13,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
-from repro.cnn import dscnn_graph, execute_graph, init_graph_params
+from repro.backend import lower
+from repro.cnn import dscnn_graph, init_graph_params
 from repro.core import apply_transforms, dispatch
 from repro.core.graph import dead_node_elimination, integerize, layout_to
 from repro.targets import make_diana_target, make_gap9_target
@@ -29,11 +31,18 @@ for tgt in (make_gap9_target(), make_diana_target()):
     first = mapped.module_of("conv_4x10")
     print(f"        4x10-filter first layer -> {first} (paper: not NE16-able)")
 
-# 3. the graphs really run (jnp interpreter)
+# 3. lower the *mapped* graph: fused, memory-planned segment executors,
+#    golden-checked bit-exact against the interpreter
 params = init_graph_params(g)
 x = {k: np.random.default_rng(0).integers(-128, 128, s).astype("float32") for k, s in g.inputs.items()}
-out = execute_graph(g, params, x)
-print("executed:", {k: v.shape for k, v in out.items()})
+mapped = dispatch(g, make_gap9_target())
+compiled = lower(mapped)
+
+max_err = compiled.verify(params, x)  # runs the interpreter internally
+assert max_err == 0.0, f"compiled path diverged from the interpreter: {max_err}"
+out = compiled.run(params, x, timed=True)
+print("\ncompiled == interpreted:", {k: v.shape for k, v in out.items()}, f"(max |err| = {max_err})")
+print(compiled.report())
 
 # 4. L1 ablation (Fig. 9/10)
 print("\nGAP9 L1 scaling (MACs/cycle):")

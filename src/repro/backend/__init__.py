@@ -1,0 +1,32 @@
+"""repro.backend — lowering + runtime: MappedGraphs become executable code.
+
+The paper's "code generation and deployment" stage (Sec. IV-C) rebuilt on
+jax: where MATCH emits Mako-templated C around DORY-style memory plans,
+this package walks a :class:`~repro.core.dispatcher.MappedGraph` and
+
+* **lowers** every mapped segment into one fused, ``jax.jit``-compiled
+  executor parameterized by its winning LOMA schedule
+  (:mod:`repro.backend.lower`),
+* **plans memory statically** — liveness over the segment execution order,
+  first-fit + hill-climb offsets into flat per-level arenas, validated
+  against each module's declared ``MemoryLevel`` capacities
+  (:mod:`repro.backend.memory`), and
+* **runs** the result with per-segment timing and a predicted-vs-measured
+  report, golden-checked bit-exact against the ``repro.cnn`` interpreter
+  (:mod:`repro.backend.runtime`).
+"""
+
+from .lower import LoweredSegment, LoweringError, lower
+from .memory import BufferAlloc, MemoryPlan, MemoryPlanError, plan_memory
+from .runtime import CompiledModel
+
+__all__ = [
+    "lower",
+    "LoweredSegment",
+    "LoweringError",
+    "plan_memory",
+    "MemoryPlan",
+    "MemoryPlanError",
+    "BufferAlloc",
+    "CompiledModel",
+]

@@ -1,0 +1,281 @@
+"""Static memory planning for compiled MappedGraphs (paper Sec. IV-C).
+
+MATCH ships ``static_mem_plan``: every inter-segment activation gets a
+fixed offset in a flat arena sized at compile time, so the generated C
+never calls malloc.  This module reproduces that design over the repro
+graph IR:
+
+* **Liveness** — each segment output (and each graph input) is a buffer
+  live from the segment that produces it to the last segment that reads
+  it; chain-internal tensors never materialize (that is the fusion win).
+* **Offset assignment** — first-fit into a flat arena at the target's
+  shared home level (L2 on the MCUs), then a bounded hill-climb over the
+  allocation order, keeping any permutation that shrinks the arena peak —
+  the same shape as the real repo's hill-climb allocator.
+* **Validation** — per-segment L1 working sets are recomputed from each
+  segment's winning schedule via
+  :func:`repro.core.cost_model.tile_working_set` and checked against the
+  module's declared ``MemoryLevel`` capacities: exactly the constraint the
+  LOMA DSE priced, re-enforced at deployment time.  A segment whose
+  working set no longer fits (e.g. after an L1-rescaling ablation) either
+  raises :class:`MemoryPlanError` or is recorded as a *spill* — it streams
+  from the home level instead of running tiled-resident.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+from repro.core import MappedGraph, tile_working_set
+
+__all__ = ["BufferAlloc", "MemoryPlan", "MemoryPlanError", "plan_memory"]
+
+
+class MemoryPlanError(RuntimeError):
+    """A buffer or working set exceeds a declared MemoryLevel capacity."""
+
+
+@dataclass(frozen=True)
+class BufferAlloc:
+    """One planned activation buffer in the home-level arena."""
+
+    name: str
+    nbytes: int
+    offset: int
+    start: int  # first segment index (inclusive) the buffer is live at
+    end: int  # first segment index it is dead at (exclusive)
+
+    def overlaps_time(self, other: "BufferAlloc") -> bool:
+        return not (self.end <= other.start or other.end <= self.start)
+
+    def overlaps_space(self, other: "BufferAlloc") -> bool:
+        return not (
+            self.offset + self.nbytes <= other.offset
+            or other.offset + other.nbytes <= self.offset
+        )
+
+
+@dataclass
+class MemoryPlan:
+    """Static allocation result for one MappedGraph."""
+
+    graph_name: str
+    target_name: str
+    home_level: str
+    buffers: dict[str, BufferAlloc]
+    arena_bytes: dict[str, int]  # level name -> bytes the plan needs there
+    capacities: dict[str, int]  # level name -> declared size_bytes
+    l1_by_segment: list[dict[str, int]]  # per segment: level -> working set
+    weight_bytes: int = 0
+    spills: tuple[str, ...] = ()
+    attrs: dict = field(default_factory=dict)
+
+    @property
+    def fits(self) -> bool:
+        return all(self.arena_bytes[l] <= self.capacities[l] for l in self.arena_bytes)
+
+    @property
+    def home_total_bytes(self) -> int:
+        """Arena + resident weights: the deployability number of the
+        paper's Table III OoM criterion."""
+        return self.arena_bytes.get(self.home_level, 0) + self.weight_bytes
+
+    def validate(self) -> None:
+        """Raise MemoryPlanError on any per-level capacity overflow."""
+        bad = [
+            f"{l}: {self.arena_bytes[l]} > {self.capacities[l]} bytes"
+            for l in self.arena_bytes
+            if self.arena_bytes[l] > self.capacities[l]
+        ]
+        if bad:
+            raise MemoryPlanError(
+                f"{self.graph_name} on {self.target_name}: " + "; ".join(bad)
+            )
+
+    def check_no_overlap(self) -> bool:
+        """Planner self-check: no two live-range-overlapping buffers share
+        arena bytes (used by the tests)."""
+        allocs = list(self.buffers.values())
+        for i, a in enumerate(allocs):
+            for b in allocs[i + 1 :]:
+                if a.overlaps_time(b) and a.overlaps_space(b):
+                    return False
+        return True
+
+    def report(self) -> str:
+        lines = [f"MemoryPlan[{self.graph_name} on {self.target_name}]"]
+        for lvl in sorted(self.arena_bytes):
+            used, cap = self.arena_bytes[lvl], self.capacities[lvl]
+            kind = "arena" if lvl == self.home_level else "peak working set"
+            flag = "" if used <= cap else "  ** OVERFLOW **"
+            lines.append(
+                f"  {lvl:<8s} {kind:<17s} {used:>9d} B / {cap:>9d} B"
+                f" ({100.0 * used / max(cap, 1):5.1f}%){flag}"
+            )
+        lines.append(
+            f"  {self.home_level:<8s} + resident weights {self.weight_bytes} B"
+            f" -> total {self.home_total_bytes} B"
+        )
+        if self.spills:
+            lines.append(f"  spilled segments (stream from {self.home_level}): "
+                         + ", ".join(self.spills))
+        lines.append(f"  {len(self.buffers)} planned buffers, fits={self.fits}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Offset assignment: first-fit + hill-climb over the allocation order
+# ---------------------------------------------------------------------------
+
+
+def _first_fit(
+    order: list[str], lives: dict[str, tuple[int, int, int]]
+) -> tuple[dict[str, int], int]:
+    """Place buffers in ``order``; returns (offsets, arena peak bytes)."""
+    placed: list[tuple[int, int, int, int]] = []  # (offset, nbytes, start, end)
+    offsets: dict[str, int] = {}
+    peak = 0
+    for name in order:
+        nb, s, e = lives[name]
+        spans = sorted(
+            (o, o + n) for o, n, s2, e2 in placed if not (e2 <= s or e <= s2)
+        )
+        off = 0
+        for lo, hi in spans:
+            if off + nb <= lo:
+                break
+            off = max(off, hi)
+        offsets[name] = off
+        placed.append((off, nb, s, e))
+        peak = max(peak, off + nb)
+    return offsets, peak
+
+
+def _hill_climb(
+    order: list[str],
+    lives: dict[str, tuple[int, int, int]],
+    iters: int,
+    seed: int,
+) -> tuple[dict[str, int], int]:
+    """Bounded stochastic hill-climb over the first-fit allocation order."""
+    rng = random.Random(seed)
+    best_order = list(order)
+    best_offsets, best_peak = _first_fit(best_order, lives)
+    if len(order) < 2:
+        return best_offsets, best_peak
+    for _ in range(iters):
+        i, j = rng.sample(range(len(best_order)), 2)
+        cand = list(best_order)
+        cand[i], cand[j] = cand[j], cand[i]
+        offsets, peak = _first_fit(cand, lives)
+        if peak < best_peak:
+            best_order, best_offsets, best_peak = cand, offsets, peak
+    return best_offsets, best_peak
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def plan_memory(
+    mapped: MappedGraph,
+    *,
+    allow_spill: bool = True,
+    hill_climb_iters: int = 200,
+    seed: int = 0,
+) -> MemoryPlan:
+    """Plan static memory for ``mapped``'s segment execution order."""
+    graph, target = mapped.graph, mapped.target
+    segments = mapped.segments
+    n = len(segments)
+    home = target.fallback.memories[-1]
+
+    # ---- liveness over the segment order --------------------------------
+    # (nbytes, start, end); graph inputs are live from the start, graph
+    # outputs to the end.
+    lives: dict[str, tuple[int, int, int]] = {}
+    consumer_elem = {
+        name: max(
+            (int(c.attr("elem_bytes", 1) or 1) for c in graph.consumers(name)),
+            default=1,
+        )
+        for name in graph.inputs
+    }
+    for name, shape in graph.inputs.items():
+        nb = consumer_elem[name]
+        for d in shape:
+            nb *= int(d)
+        lives[name] = (max(nb, 1), 0, 1)
+    for i, seg in enumerate(segments):
+        out = seg.output_node
+        lives[out.name] = (max(out.output_bytes(), 1), i, i + 1)
+    for i, seg in enumerate(segments):
+        for src in seg.external_inputs(graph):
+            if src in lives:
+                nb, s, _ = lives[src]
+                lives[src] = (nb, s, max(lives[src][2], i + 1))
+    for o in graph.outputs:
+        if o in lives:
+            nb, s, _ = lives[o]
+            lives[o] = (nb, s, n + 1)
+
+    # ---- home-level arena: first-fit + hill-climb -----------------------
+    order = sorted(lives, key=lambda k: (lives[k][1], -lives[k][0], k))
+    offsets, peak = _hill_climb(order, lives, hill_climb_iters, seed)
+    buffers = {
+        name: BufferAlloc(name, lives[name][0], offsets[name], lives[name][1], lives[name][2])
+        for name in lives
+    }
+
+    # ---- per-segment L1 working sets from the winning schedules ---------
+    l1_by_segment: list[dict[str, int]] = []
+    level_caps: dict[str, int] = {home.name: home.size_bytes}
+    level_peaks: dict[str, int] = {home.name: peak}
+    spills: list[str] = []
+    for seg in segments:
+        usage: dict[str, int] = {}
+        if seg.workload is not None and seg.schedule is not None:
+            module = target.module(seg.module)
+            tiles = dict(seg.schedule.mapping.tiles)
+            try:
+                usage = tile_working_set(seg.workload, tiles, module)
+            except KeyError:
+                usage = {}
+            over = [
+                lvl
+                for lvl in module.memories[:-1]
+                if usage.get(lvl.name, 0) > lvl.size_bytes
+            ]
+            for lvl in module.memories[:-1]:
+                level_caps.setdefault(lvl.name, lvl.size_bytes)
+            if over:
+                names = ", ".join(
+                    f"{l.name} ({usage[l.name]} > {l.size_bytes} B)" for l in over
+                )
+                if not allow_spill:
+                    raise MemoryPlanError(
+                        f"segment {seg.anchor.name} on {seg.module}: "
+                        f"working set exceeds {names}"
+                    )
+                spills.append(seg.anchor.name)
+                usage = {}  # streams from home instead of running resident
+        l1_by_segment.append(usage)
+        for lvl_name, used in usage.items():
+            level_peaks[lvl_name] = max(level_peaks.get(lvl_name, 0), used)
+
+    from repro.cnn.analysis import weight_bytes  # graph-generic, no cycle
+
+    return MemoryPlan(
+        graph_name=graph.name,
+        target_name=target.name,
+        home_level=home.name,
+        buffers=buffers,
+        arena_bytes=level_peaks,
+        capacities=level_caps,
+        l1_by_segment=l1_by_segment,
+        weight_bytes=weight_bytes(graph),
+        spills=tuple(spills),
+        attrs={"hill_climb_iters": hill_climb_iters},
+    )

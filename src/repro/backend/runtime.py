@@ -1,0 +1,158 @@
+"""CompiledModel: the deployable artifact lowering produces.
+
+Executes the lowered segments in topological (dispatch) order, one fused
+jitted call per segment, with optional per-segment wall-clock timing.
+``report()`` is the deployment summary the paper's generated runtime
+prints: per-module predicted cycles, the static memory plan, and a
+predicted-vs-measured table once a timed run has happened.
+
+Bit-exactness contract: ``run(params, inputs)`` returns exactly what
+``repro.cnn.execute_graph(graph, params, inputs)`` returns (checked by
+``verify`` and by tests/test_backend.py on all four MLPerf-Tiny nets).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MappedGraph
+
+if TYPE_CHECKING:  # avoid a circular import with .lower
+    from .lower import LoweredSegment
+    from .memory import MemoryPlan
+
+__all__ = ["CompiledModel", "SegmentTiming"]
+
+
+@dataclass(frozen=True)
+class SegmentTiming:
+    """Measured wall-clock for one segment of one timed run."""
+
+    name: str
+    module: str
+    route: str
+    predicted_cycles: float
+    measured_us: float
+
+
+@dataclass
+class CompiledModel:
+    """A MappedGraph lowered to fused, memory-planned segment executors."""
+
+    mapped: MappedGraph
+    segments: list["LoweredSegment"]
+    memory_plan: "MemoryPlan"
+    attrs: dict = field(default_factory=dict)
+    _last_timings: list[SegmentTiming] = field(default_factory=list, repr=False)
+
+    @property
+    def graph(self):
+        return self.mapped.graph
+
+    @property
+    def target(self):
+        return self.mapped.target
+
+    # -- execution ------------------------------------------------------
+    def run(self, params: dict, inputs: dict, *, timed: bool = False) -> dict:
+        """Execute all segments in order; returns {output_name: array}.
+
+        ``timed=True`` synchronizes after every segment and records a
+        :class:`SegmentTiming` row (retrievable via ``last_timings``).
+        """
+        env: dict[str, jnp.ndarray] = {
+            k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()
+        }
+        timings: list[SegmentTiming] = []
+        for ls in self.segments:
+            xs = [env[name] for name in ls.input_names]
+            seg_params = ls.params_slice(params)
+            if timed:
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(ls.fn(seg_params, *xs))
+                us = (time.perf_counter() - t0) * 1e6
+                timings.append(
+                    SegmentTiming(ls.name, ls.module, ls.route, ls.segment.cycles, us)
+                )
+            else:
+                out = ls.fn(seg_params, *xs)
+            env[ls.output_name] = out
+        if timed:
+            self._last_timings = timings
+        return {o: env[o] for o in self.graph.outputs}
+
+    @property
+    def last_timings(self) -> list[SegmentTiming]:
+        return list(self._last_timings)
+
+    def verify(self, params: dict, inputs: dict) -> float:
+        """Max abs deviation vs the reference interpreter (0.0 = bit-exact)."""
+        from repro.cnn.execute import execute_graph
+
+        ref = execute_graph(self.graph, params, inputs)
+        got = self.run(params, inputs)
+        err = 0.0
+        for k in ref:
+            err = max(err, float(jnp.max(jnp.abs(ref[k] - got[k]))))
+        return err
+
+    # -- accounting -----------------------------------------------------
+    def predicted_cycles(self) -> float:
+        return self.mapped.total_cycles()
+
+    def predicted_latency_s(self) -> float:
+        return self.mapped.latency_s()
+
+    def cycles_by_module(self) -> dict[str, float]:
+        return self.mapped.cycles_by_module()
+
+    def fused_node_count(self) -> int:
+        return sum(len(ls.segment.nodes) for ls in self.segments)
+
+    def routes(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for ls in self.segments:
+            out[ls.route] = out.get(ls.route, 0) + 1
+        return out
+
+    def report(self) -> str:
+        """Deployment report: segments, per-module cycles, memory plan,
+        and predicted-vs-measured when a ``run(..., timed=True)`` exists."""
+        g, t = self.graph, self.target
+        lines = [
+            f"CompiledModel[{g.name} on {t.name}] — "
+            f"{len(self.segments)} segments / {self.fused_node_count()} nodes, "
+            f"routes {self.routes()}"
+        ]
+        measured = {tm.name: tm for tm in self._last_timings}
+        header = f"  {'segment':<28s} {'module':<9s} {'route':<11s} {'pred cyc':>12s}"
+        if measured:
+            header += f" {'meas us':>10s}"
+        lines.append(header)
+        for ls in self.segments:
+            row = (
+                f"  {ls.name:<28.28s} {ls.module:<9s} {ls.route:<11s}"
+                f" {ls.segment.cycles:>12.0f}"
+            )
+            tm = measured.get(ls.name)
+            if measured:
+                row += f" {tm.measured_us:>10.1f}" if tm else f" {'-':>10s}"
+            lines.append(row)
+        mods = ", ".join(
+            f"{m}={c:.0f}" for m, c in sorted(self.cycles_by_module().items())
+        )
+        lines.append(
+            f"  predicted total {self.predicted_cycles():.0f} cycles"
+            f" ({self.predicted_latency_s()*1e3:.3f} ms @ module clock): {mods}"
+        )
+        if measured:
+            total_us = sum(tm.measured_us for tm in self._last_timings)
+            lines.append(f"  measured host wall-clock {total_us:.1f} us (jax backend)")
+        lines.append(self.memory_plan.report())
+        return "\n".join(lines)

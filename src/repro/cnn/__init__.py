@@ -6,7 +6,7 @@ interpreter so the graphs execute end-to-end, not just schedule.
 """
 
 from .analysis import fits_memory, network_memory, peak_activation_bytes, weight_bytes
-from .execute import execute_graph, init_graph_params
+from .execute import apply_node, execute_graph, init_graph_params
 from .nets import (
     conv_block_graph,
     dae_graph,
@@ -21,6 +21,7 @@ __all__ = [
     "network_memory",
     "peak_activation_bytes",
     "weight_bytes",
+    "apply_node",
     "execute_graph",
     "init_graph_params",
     "conv_block_graph",

@@ -6,6 +6,11 @@ backend.  Integer inference is simulated in float32 with integer-valued
 tensors: conv/dense accumulate int8 x int8 products exactly, and
 ``requant`` applies the paper's rewritten arithmetic f(x) = (x*M + B) >> S
 (Table II) via round+clip.
+
+``apply_node`` is the single source of truth for per-op semantics: the
+interpreter loop below and the fused segment executors in
+``repro.backend.lower`` both call it, which is what makes the compiled
+path bit-exact against this interpreter by construction.
 """
 
 from __future__ import annotations
@@ -18,7 +23,7 @@ import numpy as np
 
 from repro.core import Graph, Node
 
-__all__ = ["init_graph_params", "execute_graph"]
+__all__ = ["apply_node", "init_graph_params", "execute_graph"]
 
 
 def _geom(n: Node, k: str, d: int = 1) -> int:
@@ -44,8 +49,11 @@ def init_graph_params(graph: Graph, seed: int = 0) -> dict:
             k = _geom(n, "K", _geom(n, "C"))
             params[n.name] = {"b": rng.integers(-16, 17, size=(k,)).astype(np.float32)}
         elif n.op == "requant":
-            # (x * M + B) >> S with M=1, B=0, S=5: divide by 32, round, clip
-            params[n.name] = {"shift": np.float32(5.0)}
+            # (x * M + B) >> S with M=1, B=0: divide by 2^S, round, clip.
+            # A folded requant (fold_requant_div) carries the chain's shift
+            # in its attrs — honor it instead of clobbering with 5.
+            s = n.attr("shift", None)
+            params[n.name] = {"shift": np.float32(5.0 if s is None else float(s))}
     return params
 
 
@@ -71,49 +79,92 @@ def _dwconv(x, w, stride):
     )
 
 
+def _scalar(p: dict, n: Node, key: str, default: float) -> jnp.ndarray:
+    """Per-node scalar constant: params win over node attrs over default."""
+    if key in p:
+        return jnp.asarray(p[key], jnp.float32)
+    v = n.attr(key, None)
+    return jnp.float32(float(default if v is None else v))
+
+
+def apply_node(n: Node, p: dict, xs: list) -> jnp.ndarray:
+    """Evaluate one graph node given its params ``p`` and inputs ``xs``.
+
+    Shared by ``execute_graph`` and the fused segment executors of
+    ``repro.backend``; any semantics change here changes both paths.
+    """
+    if n.op == "conv2d":
+        return _conv(xs[0], jnp.asarray(p["w"]), _geom(n, "stride"))
+    if n.op == "dwconv2d":
+        return _dwconv(xs[0], jnp.asarray(p["w"]), _geom(n, "stride"))
+    if n.op == "dense":
+        x = xs[0]
+        x = x.reshape(x.shape[0], -1)  # flatten (B,1,1,C) heads
+        return x @ jnp.asarray(p["w"]).T
+    if n.op == "bias_add":
+        return xs[0] + jnp.asarray(p["b"])
+    if n.op == "requant":
+        # (x * M + B) >> S with round-half-even + clip; M/B/S come from
+        # params, else from attrs fold_requant_div carried off the chain
+        scale = _scalar(p, n, "scale", 1.0)
+        addend = _scalar(p, n, "addend", 0.0)
+        shift = p["shift"] if "shift" in p else _scalar(p, n, "shift", 5.0)
+        y = jnp.round((xs[0] * scale + addend) / (2.0**shift))
+        return jnp.clip(y, -128, 127)
+    if n.op == "relu":
+        return jnp.maximum(xs[0], 0.0)
+    if n.op == "add":
+        if len(xs) == 2:
+            return xs[0] + xs[1]
+        # constant addend (un-folded requant chains): x + B
+        return xs[0] + _scalar(p, n, "addend", 0.0)
+    if n.op == "avgpool":
+        # global average pool over the spatial window (full extent in
+        # the MLPerf-Tiny heads), keep integer-valued semantics
+        return jnp.round(jnp.mean(xs[0], axis=(1, 2), keepdims=True))
+    if n.op == "maxpool":
+        return jax.lax.reduce_window(
+            xs[0],
+            -jnp.inf,
+            jax.lax.max,
+            (1, _geom(n, "FY"), _geom(n, "FX"), 1),
+            (1, _geom(n, "FY"), _geom(n, "FX"), 1),
+            "VALID",
+        )
+    if n.op in ("reshape", "identity"):
+        return xs[0]
+    if n.op == "mul":
+        if len(xs) == 2:
+            return xs[0] * xs[1]
+        return xs[0] * _scalar(p, n, "scale", 1.0)
+    if n.op == "div":
+        if len(xs) == 2:
+            return xs[0] / xs[1]
+        return xs[0] / _scalar(p, n, "divisor", 1.0)
+    if n.op == "rshift":
+        # arithmetic right shift on integer-valued tensors: floor(x / 2^S)
+        shift = _scalar(p, n, "shift", 0.0)
+        return jnp.floor(xs[0] / (2.0**shift))
+    if n.op == "clip":
+        lo = n.attr("clip_min", None)
+        hi = n.attr("clip_max", None)
+        return jnp.clip(
+            xs[0],
+            -128.0 if lo is None else float(lo),
+            127.0 if hi is None else float(hi),
+        )
+    raise NotImplementedError(f"op {n.op}")
+
+
 def execute_graph(graph: Graph, params: dict, inputs: dict) -> dict:
     """Interpret the graph; returns {output_name: array}."""
     env: dict[str, jnp.ndarray] = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
 
     for n in graph.nodes:
         xs = [env[i] for i in n.inputs]
-        p = params.get(n.name, {})
-        if n.op == "conv2d":
-            env[n.name] = _conv(xs[0], jnp.asarray(p["w"]), _geom(n, "stride"))
-        elif n.op == "dwconv2d":
-            env[n.name] = _dwconv(xs[0], jnp.asarray(p["w"]), _geom(n, "stride"))
-        elif n.op == "dense":
-            x = xs[0]
-            x = x.reshape(x.shape[0], -1)  # flatten (B,1,1,C) heads
-            env[n.name] = x @ jnp.asarray(p["w"]).T
-        elif n.op == "bias_add":
-            env[n.name] = xs[0] + jnp.asarray(p["b"])
-        elif n.op == "requant":
-            shift = p.get("shift", 5.0)
-            y = jnp.round(xs[0] / (2.0**shift))
-            env[n.name] = jnp.clip(y, -128, 127)
-        elif n.op == "relu":
-            env[n.name] = jnp.maximum(xs[0], 0.0)
-        elif n.op == "add":
-            env[n.name] = xs[0] + xs[1]
-        elif n.op == "avgpool":
-            # global average pool over the spatial window (full extent in
-            # the MLPerf-Tiny heads), keep integer-valued semantics
-            env[n.name] = jnp.round(jnp.mean(xs[0], axis=(1, 2), keepdims=True))
-        elif n.op == "maxpool":
-            env[n.name] = jax.lax.reduce_window(
-                xs[0],
-                -jnp.inf,
-                jax.lax.max,
-                (1, _geom(n, "FY"), _geom(n, "FX"), 1),
-                (1, _geom(n, "FY"), _geom(n, "FX"), 1),
-                "VALID",
-            )
-        elif n.op in ("reshape", "identity"):
-            env[n.name] = xs[0]
-        elif n.op in ("mul", "div", "rshift", "clip"):
-            env[n.name] = xs[0]  # folded by transformations in real flows
-        else:
+        try:
+            env[n.name] = apply_node(n, params.get(n.name, {}), xs)
+        except NotImplementedError:
             raise NotImplementedError(f"op {n.op} in {graph.name}")
 
     return {o: env[o] for o in graph.outputs}

@@ -15,6 +15,7 @@ from .cost_model import (
     evaluate_mapping,
     operand_traffic,
     tile_chunks,
+    tile_working_set,
     transfer_cost,
 )
 from .dispatcher import MappedGraph, MappedSegment, dispatch
@@ -29,7 +30,7 @@ from .loma import (
     search_schedule,
 )
 from .patterns import Pattern, PatternMatch, default_workload, find_matches
-from .schedule import KernelSchedule, schedule_for_kernel, tpu_align
+from .schedule import KernelSchedule, schedule_for_kernel, schedule_from_result, tpu_align
 from .target import (
     ComputeModel,
     ExecutionModule,
@@ -55,6 +56,7 @@ __all__ = [
     "evaluate_mapping",
     "operand_traffic",
     "tile_chunks",
+    "tile_working_set",
     "transfer_cost",
     "MappedGraph",
     "MappedSegment",
@@ -75,6 +77,7 @@ __all__ = [
     "find_matches",
     "KernelSchedule",
     "schedule_for_kernel",
+    "schedule_from_result",
     "tpu_align",
     "ComputeModel",
     "ExecutionModule",

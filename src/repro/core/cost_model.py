@@ -30,6 +30,7 @@ __all__ = [
     "evaluate_mapping",
     "operand_traffic",
     "tile_chunks",
+    "tile_working_set",
     "transfer_cost",
 ]
 
@@ -250,23 +251,41 @@ def _l_ops(
 # ---------------------------------------------------------------------------
 
 
+def tile_working_set(
+    workload: Workload,
+    tiles: Mapping[str, int],
+    module: ExecutionModule,
+) -> dict[str, int]:
+    """Bytes each inner memory level must hold for one tile of ``tiles``.
+
+    Double-buffered modules charge 2x per streamed operand (the revolving
+    window), matching the feasibility rule LOMA enforced during the DSE.
+    The home (last) level is excluded — it holds full tensors, planned by
+    ``repro.backend.memory``.  Raises KeyError when no inner level serves
+    an operand.
+    """
+    buf = 2 if module.double_buffer else 1
+    usage: dict[str, int] = {m.name: 0 for m in module.memories[:-1]}
+    for op in workload.operands:
+        for lvl in module.memories[:-1]:  # last level is the home (L2/HBM)
+            if lvl.holds(op.name):
+                need = op.footprint_bytes(tiles) * (1 if op.is_output and not module.double_buffer else buf)
+                usage[lvl.name] += need
+                break
+        else:
+            raise KeyError(f"no L1 level of {module.name} serves operand {op.name}")
+    return usage
+
+
 def _fits(
     workload: Workload,
     tiles: Mapping[str, int],
     module: ExecutionModule,
 ) -> tuple[bool, str]:
-    buf = 2 if module.double_buffer else 1
-    usage: dict[str, int] = {m.name: 0 for m in module.memories[:-1]}
-    for op in workload.operands:
-        placed = False
-        for lvl in module.memories[:-1]:  # last level is the home (L2/HBM)
-            if lvl.holds(op.name):
-                need = op.footprint_bytes(tiles) * (1 if op.is_output and not module.double_buffer else buf)
-                usage[lvl.name] += need
-                placed = True
-                break
-        if not placed:
-            return False, f"no L1 level serves operand {op.name}"
+    try:
+        usage = tile_working_set(workload, tiles, module)
+    except KeyError as e:
+        return False, e.args[0]
     for lvl in module.memories[:-1]:
         if usage[lvl.name] > lvl.size_bytes:
             return False, f"{lvl.name} overflow: {usage[lvl.name]} > {lvl.size_bytes}"

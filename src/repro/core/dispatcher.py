@@ -72,6 +72,29 @@ class MappedSegment:
     def anchor(self) -> Node:
         return self.nodes[0]
 
+    # -- lowering metadata (consumed by repro.backend) ------------------
+    @property
+    def output_node(self) -> Node:
+        """The node whose tensor leaves the segment (fusion chains are
+        single-consumer, so only the last node is externally visible)."""
+        return self.nodes[-1]
+
+    @property
+    def epilogue(self) -> tuple[Node, ...]:
+        """The fused nodes after the anchor (bias/requant/relu chains)."""
+        return self.nodes[1:]
+
+    def external_inputs(self, graph: Graph) -> tuple[str, ...]:
+        """Producer names feeding this segment from outside it, in first-use
+        order (graph inputs included) — the executor's argument order."""
+        inside = {n.name for n in self.nodes}
+        out: list[str] = []
+        for n in self.nodes:
+            for inp in n.inputs:
+                if inp not in inside and inp not in out:
+                    out.append(inp)
+        return tuple(out)
+
 
 @dataclass
 class MappedGraph:

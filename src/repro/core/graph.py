@@ -154,10 +154,19 @@ def dead_node_elimination(graph: Graph) -> Graph:
 
 def fold_requant_div(graph: Graph) -> Graph:
     """HW-aware rewrite (paper Table II, GAP9): mul-add-div requant chains
-    become a single ``requant`` node implementing (x*M + B) >> S."""
+    become a single ``requant`` node implementing (x*M + B) >> S.
+
+    The chain's constants (mul ``scale``, add ``addend``, div ``divisor`` /
+    rshift ``shift``) are carried onto the fused node so the requant
+    computes the same affine transform the unfolded ops would (rounding
+    tightens from the div/rshift semantics to requant's round-half-even —
+    that IS the paper's integerization rewrite).  A ``div`` by a
+    non-power-of-two cannot become a shift and is left unfolded.
+    """
+    import math
+
     nodes: list[Node] = []
     skip: set[str] = set()
-    by_name = {n.name: n for n in graph.nodes}
     for n in graph.nodes:
         if n.name in skip:
             continue
@@ -166,11 +175,26 @@ def fold_requant_div(graph: Graph) -> Graph:
             if c1 is not None and c1.op == "add":
                 c2 = graph.single_consumer(c1.name)
                 if c2 is not None and c2.op in ("div", "rshift"):
+                    if c2.op == "div":
+                        d = float(c2.attr("divisor", 1.0) or 1.0)
+                        s = math.log2(d) if d > 0 else -1.0
+                        if s < 0 or s != int(s):
+                            nodes.append(n)
+                            continue  # not a power of two: keep the chain
+                        shift = float(int(s))
+                    else:
+                        shift = float(c2.attr("shift", 0.0) or 0.0)
                     fused = Node(
                         c2.name,
                         "requant",
                         inputs=n.inputs,
-                        attrs={**n.attrs, "folded_from": (n.name, c1.name, c2.name)},
+                        attrs={
+                            **n.attrs,
+                            "scale": float(n.attr("scale", 1.0) or 1.0),
+                            "addend": float(c1.attr("addend", 0.0) or 0.0),
+                            "shift": shift,
+                            "folded_from": (n.name, c1.name, c2.name),
+                        },
                     )
                     nodes.append(fused)
                     skip |= {c1.name, c2.name}

@@ -22,7 +22,7 @@ from .loma import ScheduleResult, TemporalMapping, search_schedule
 from .target import ExecutionModule
 from .workload import Workload
 
-__all__ = ["KernelSchedule", "tpu_align", "schedule_for_kernel"]
+__all__ = ["KernelSchedule", "tpu_align", "schedule_for_kernel", "schedule_from_result"]
 
 # TPU tiling quanta: second-to-last dim multiple of 8 (f32) / 16 (bf16),
 # last dim multiple of 128.
@@ -67,20 +67,21 @@ class KernelSchedule:
         )
 
 
-def schedule_for_kernel(
+def schedule_from_result(
+    res: ScheduleResult,
     workload: Workload,
     module: ExecutionModule,
     *,
     align: Mapping[str, str] | None = None,
-    budget: int = 4000,
 ) -> KernelSchedule:
-    """Run the DSE and convert the winner into a KernelSchedule.
+    """Convert an already-won :class:`ScheduleResult` into a KernelSchedule.
 
+    This is the path ``repro.backend.lower`` takes: the dispatcher stored
+    each segment's winning schedule, so lowering never re-runs the DSE.
     ``align`` maps loop dims to 'lane'/'sublane' so the emitted tile sizes
     are legal Mosaic block shapes even when the best unconstrained tile is
     not hardware-aligned.
     """
-    res: ScheduleResult = search_schedule(workload, module, budget=budget)
     if not res.feasible:
         # conservative whole-array fallback (the caller may still reject)
         block = {l.name: l.size for l in workload.loops}
@@ -100,3 +101,15 @@ def schedule_for_kernel(
         res.cost.latency_cycles,
         meta={"module": module.name, "workload": workload.name, "evals": res.candidates_evaluated},
     )
+
+
+def schedule_for_kernel(
+    workload: Workload,
+    module: ExecutionModule,
+    *,
+    align: Mapping[str, str] | None = None,
+    budget: int = 4000,
+) -> KernelSchedule:
+    """Run the DSE and convert the winner into a KernelSchedule."""
+    res: ScheduleResult = search_schedule(workload, module, budget=budget)
+    return schedule_from_result(res, workload, module, align=align)

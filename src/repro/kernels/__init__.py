@@ -11,6 +11,7 @@ from .matmul_requant import matmul_requant
 from .moe_gmm import moe_gmm
 from .rglru_scan import rglru_scan
 from .ssd_scan import ssd_scan
+from .tiled_conv import tiled_conv2d
 
 __all__ = [
     "ops",
@@ -20,4 +21,5 @@ __all__ = [
     "moe_gmm",
     "rglru_scan",
     "ssd_scan",
+    "tiled_conv2d",
 ]

@@ -27,7 +27,22 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["matmul_requant"]
 
 
-def _kernel(a_ref, w_ref, mult_ref, bias_ref, o_ref, acc_ref, *, shift: int, relu: bool):
+def _round_shift_even(t: jax.Array, shift: int) -> jax.Array:
+    """round-half-to-even(t / 2^shift) in pure int32 arithmetic.
+
+    Matches ``jnp.round(x / 2**S)`` on integer-valued inputs, so a kernel
+    using this epilogue is bit-exact against the float requant oracle.
+    """
+    if shift <= 0:
+        return t
+    q = jax.lax.shift_right_arithmetic(t, shift)  # floor(t / 2^S)
+    r = t - (q << shift)  # remainder in [0, 2^S)
+    half = 1 << (shift - 1)
+    inc = jnp.where(r > half, 1, jnp.where(r == half, q & 1, 0))
+    return q + inc
+
+
+def _kernel(a_ref, w_ref, mult_ref, bias_ref, o_ref, acc_ref, *, shift: int, relu: bool, rounding: str):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -42,14 +57,18 @@ def _kernel(a_ref, w_ref, mult_ref, bias_ref, o_ref, acc_ref, *, shift: int, rel
     def _epilogue():
         acc = acc_ref[...]
         y = acc * mult_ref[...] + bias_ref[...]
-        y = jax.lax.shift_right_arithmetic(y, shift)
+        if rounding == "even":
+            y = _round_shift_even(y, shift)
+        else:
+            y = jax.lax.shift_right_arithmetic(y, shift)
         if relu:
             y = jnp.maximum(y, 0)
         o_ref[...] = jnp.clip(y, -128, 127).astype(jnp.int8)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "block_n", "block_k", "shift", "relu", "interpret")
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "shift", "relu", "rounding", "interpret"),
 )
 def matmul_requant(
     a: jax.Array,  # (M, K) int8
@@ -59,6 +78,7 @@ def matmul_requant(
     *,
     shift: int = 8,
     relu: bool = False,
+    rounding: str = "floor",  # "floor" (HW shift) | "even" (interpreter round)
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
@@ -74,7 +94,7 @@ def matmul_requant(
     bias2 = jnp.broadcast_to(bias[None, :], (1, N)).astype(jnp.int32)
 
     return pl.pallas_call(
-        functools.partial(_kernel, shift=shift, relu=relu),
+        functools.partial(_kernel, shift=shift, relu=relu, rounding=rounding),
         grid=(M // bm, N // bn, K // bk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),

@@ -1,0 +1,68 @@
+"""Banded (output-row-tiled) convolution — the conv lowering kernel.
+
+The MCU targets execute a conv as a sequence of L1-resident output
+stripes: DMA one input band (with halo) into L1, compute the OY-tile,
+stream the stripe back out.  This kernel reproduces that execution shape
+on the jax backend: the SAME-padded conv is computed band-by-band over
+output rows, with the band height coming from the winning LOMA schedule's
+OY tile (``repro.backend.lower`` passes ``block_oy``).
+
+Bit-exactness: integer-valued int8 activations/weights accumulate exactly
+in float32 (sums stay far below 2^24), so the banded result is identical
+to the whole-array conv the interpreter runs, regardless of banding.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["tiled_conv2d"]
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "block_oy", "feature_groups"))
+def tiled_conv2d(
+    x: jax.Array,  # (B, IY, IX, C) NHWC
+    w: jax.Array,  # (FY, FX, C/groups, O) HWIO
+    *,
+    stride: int = 1,
+    block_oy: int = 0,  # 0 / >=OY: single band (whole-array conv)
+    feature_groups: int = 1,
+) -> jax.Array:
+    """SAME-padded conv computed in ``block_oy``-row output bands."""
+    _, iy, ix, _ = x.shape
+    fy, fx = w.shape[0], w.shape[1]
+    oy = -(-iy // stride)
+    ox = -(-ix // stride)
+    # XLA/TF SAME padding: split the total, extra row/col at the bottom/right
+    pad_y = max((oy - 1) * stride + fy - iy, 0)
+    pad_x = max((ox - 1) * stride + fx - ix, 0)
+    x_pad = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (pad_y // 2, pad_y - pad_y // 2),
+            (pad_x // 2, pad_x - pad_x // 2),
+            (0, 0),
+        ),
+    )
+
+    if block_oy <= 0 or block_oy > oy:
+        block_oy = oy
+
+    def band(r0: int, r1: int) -> jax.Array:
+        lo = r0 * stride
+        hi = (r1 - 1) * stride + fy  # input rows [lo, hi) cover out rows [r0, r1)
+        return jax.lax.conv_general_dilated(
+            x_pad[:, lo:hi],
+            w,
+            window_strides=(stride, stride),
+            padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=feature_groups,
+        )
+
+    bands = [band(r0, min(r0 + block_oy, oy)) for r0 in range(0, oy, block_oy)]
+    return bands[0] if len(bands) == 1 else jnp.concatenate(bands, axis=1)

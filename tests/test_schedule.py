@@ -1,0 +1,114 @@
+"""repro.core.schedule: tpu_align quanta + KernelSchedule invariants."""
+
+import math
+
+import pytest
+
+from repro.core import (
+    ComputeModel,
+    ExecutionModule,
+    MemoryLevel,
+    SpatialUnrolling,
+    matmul_workload,
+    schedule_for_kernel,
+    schedule_from_result,
+    search_schedule,
+    tpu_align,
+)
+from repro.targets.tpu_v5e import make_tpu_v5e_target
+
+
+# ---------------------------------------------------------------------------
+# tpu_align: lane / sublane / elem-byte quanta
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "size,expected",
+    [(1, 128), (127, 128), (128, 128), (129, 256), (1000, 1024)],
+)
+def test_tpu_align_lane_multiples_of_128(size, expected):
+    assert tpu_align(size, "lane") == expected
+
+
+@pytest.mark.parametrize(
+    "elem_bytes,quantum",
+    [(2, 16), (4, 8), (1, 32)],  # bf16 / f32 / int8 sublane packing
+)
+def test_tpu_align_sublane_quanta_by_elem_bytes(elem_bytes, quantum):
+    assert tpu_align(1, "sublane", elem_bytes) == quantum
+    assert tpu_align(quantum, "sublane", elem_bytes) == quantum
+    assert tpu_align(quantum + 1, "sublane", elem_bytes) == 2 * quantum
+
+
+def test_tpu_align_unknown_elem_bytes_defaults_to_8():
+    assert tpu_align(3, "sublane", elem_bytes=3) == 8
+
+
+def test_tpu_align_passthrough_cases():
+    assert tpu_align(17, "serial") == 17  # non-tiled dim kinds unchanged
+    assert tpu_align(0, "lane") == 0
+    assert tpu_align(-4, "sublane") == -4
+
+
+# ---------------------------------------------------------------------------
+# schedule_for_kernel: grid-order / block invariants
+# ---------------------------------------------------------------------------
+
+ALIGN = {"M": "sublane", "N": "lane", "KD": "lane"}
+
+
+def _mxu():
+    return make_tpu_v5e_target().module("mxu")
+
+
+def test_schedule_for_kernel_block_and_order_invariants():
+    wl = matmul_workload(name="t_mm", M=512, N=1024, KD=768)
+    s = schedule_for_kernel(wl, _mxu(), align=ALIGN, budget=500)
+    full = wl.dim_sizes
+    # grid order is a permutation of the workload dims
+    assert sorted(s.grid_order) == sorted(full)
+    # matmul operands default to 2-byte elems: sublane quantum 16, lane 128
+    for d, q in (("M", 16), ("N", 128), ("KD", 128)):
+        b = s.block_of(d, full[d])
+        assert 1 <= b <= full[d]
+        # aligned tiles are quantum multiples (or the full, already-legal dim)
+        assert b % q == 0 or b == full[d], (d, b)
+    assert math.isfinite(s.predicted_cycles) and s.predicted_cycles > 0
+    assert s.meta["module"] == "mxu" and s.meta["workload"] == "t_mm"
+
+
+def test_schedule_grid_for_is_ceil_division():
+    wl = matmul_workload(name="t_grid", M=512, N=1024, KD=768)
+    s = schedule_for_kernel(wl, _mxu(), align=ALIGN, budget=500)
+    full = wl.dim_sizes
+    grid = s.grid_for(full)
+    assert grid == tuple(
+        math.ceil(full[d] / s.block_of(d, full[d])) for d in s.grid_order
+    )
+    assert all(g >= 1 for g in grid)
+
+
+def test_schedule_from_result_matches_schedule_for_kernel():
+    wl = matmul_workload(name="t_same", M=256, N=256, KD=256)
+    mod = _mxu()
+    res = search_schedule(wl, mod, budget=500)
+    via_result = schedule_from_result(res, wl, mod, align=ALIGN)
+    via_search = schedule_for_kernel(wl, mod, align=ALIGN, budget=500)
+    assert dict(via_result.block) == dict(via_search.block)
+    assert via_result.grid_order == via_search.grid_order
+    assert via_result.predicted_cycles == via_search.predicted_cycles
+
+
+def test_schedule_infeasible_falls_back_to_whole_array():
+    tiny = ExecutionModule(
+        name="tiny",
+        memories=(MemoryLevel("L1", 4, 1.0), MemoryLevel("L2", 1 << 20, 1.0)),
+        spatial={"*": SpatialUnrolling(dims={})},
+        compute=ComputeModel(),
+        supported_ops=("matmul",),
+    )
+    wl = matmul_workload(name="t_inf", M=128, N=128, KD=128)
+    s = schedule_for_kernel(wl, tiny, budget=200)
+    assert dict(s.block) == wl.dim_sizes  # conservative whole-array block
+    assert s.predicted_cycles == float("inf")
