@@ -18,3 +18,16 @@ def emit(name: str, us_per_call: float, derived: str) -> str:
     row = f"{name},{us_per_call:.1f},{derived}"
     print(row, flush=True)
     return row
+
+
+def target_prefix(tgt_name: str, out_path, default_json: str, baseline: str = "gap9"):
+    """(row-name prefix, de-clobbered JSON path) for target-generic benches.
+
+    The baseline target keeps the historical row names and summary path;
+    any other resolved target name prefixes its rows and gets its own
+    JSON file so per-target runs do not overwrite each other.
+    """
+    prefix = "" if tgt_name == baseline else f"{tgt_name}_"
+    if prefix and out_path == default_json:
+        out_path = f"{default_json[:-len('.json')]}_{tgt_name}.json"
+    return prefix, out_path

@@ -24,15 +24,16 @@ import numpy as np
 from repro.backend import lower
 from repro.cnn import execute_graph, init_graph_params, mlperf_tiny_networks
 from repro.core import dispatch
-from repro.targets import make_gap9_target
+from repro.targets import get_target
 
-from .common import emit, timed
+from .common import emit, target_prefix, timed
 
 
-def run(out_path: str | None = "compiled_e2e.json") -> list[str]:
+def run(out_path: str | None = "compiled_e2e.json", target: str = "gap9") -> list[str]:
     rows = []
     summary: dict[str, dict] = {}
-    tgt = make_gap9_target()
+    tgt = get_target(target)
+    prefix, out_path = target_prefix(tgt.name, out_path, "compiled_e2e.json")
 
     for name, g in mlperf_tiny_networks().items():
         params = init_graph_params(g)
@@ -79,7 +80,7 @@ def run(out_path: str | None = "compiled_e2e.json") -> list[str]:
         }
         rows.append(
             emit(
-                f"compiled_e2e_{name}",
+                f"compiled_e2e_{prefix}{name}",
                 fused_us,
                 f"interp_us={interp_us:.1f};faithful_us={compiled_us:.1f};"
                 f"fused_speedup={speedup:.2f}x;bit_exact={max_err == 0.0};"

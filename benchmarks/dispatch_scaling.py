@@ -22,16 +22,17 @@ from pathlib import Path
 
 from repro.cnn import mlperf_tiny_networks
 from repro.core import SchedulePlanner, clear_schedule_cache, dispatch
-from repro.targets import make_gap9_target
+from repro.targets import get_target
 
-from .common import emit, timed
+from .common import emit, target_prefix, timed
 
 
-def run(out_path: str | None = "dispatch_scaling.json") -> list[str]:
+def run(out_path: str | None = "dispatch_scaling.json", target: str = "gap9") -> list[str]:
     rows = []
     summary: dict[str, dict] = {}
     tmpdir = Path(tempfile.mkdtemp(prefix="match_dispatch_scaling_"))
-    tgt = make_gap9_target()
+    tgt = get_target(target)
+    prefix, out_path = target_prefix(tgt.name, out_path, "dispatch_scaling.json")
 
     for name, g in mlperf_tiny_networks().items():
         cache = tmpdir / f"{name}.json"
@@ -66,7 +67,7 @@ def run(out_path: str | None = "dispatch_scaling.json") -> list[str]:
         }
         rows.append(
             emit(
-                f"dispatch_scaling_{name}",
+                f"dispatch_scaling_{prefix}{name}",
                 cold_us,
                 f"dp_ms={dp_ms:.3f};greedy_ms={greedy_ms:.3f};"
                 f"warm_us={warm_us:.1f};warm_speedup={speedup:.1f}x",

@@ -13,14 +13,14 @@ from __future__ import annotations
 
 from repro.cnn import resnet8_graph
 from repro.core import dispatch
-from repro.targets import make_gap9_target
+from repro.targets import get_target
 
 from .common import emit, timed
 
 
 def run() -> list[str]:
     g = resnet8_graph()
-    tgt = make_gap9_target()
+    tgt = get_target("gap9")
     mg, us = timed(dispatch, g, tgt)
     rows = []
     for seg in mg.segments:

@@ -11,13 +11,13 @@ from __future__ import annotations
 
 from repro.cnn import conv_block_graph
 from repro.core import clear_schedule_cache, dispatch
-from repro.targets import make_diana_target
+from repro.targets import get_target
 
 from .common import emit, timed
 
 
 def run() -> list[str]:
-    tgt = make_diana_target()
+    tgt = get_target("diana")
     rows = []
     best = {"speedup": 0.0, "mac": 0.0}
     for depthwise in (False, True):

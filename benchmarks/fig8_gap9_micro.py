@@ -8,13 +8,13 @@ from __future__ import annotations
 
 from repro.cnn import conv_block_graph
 from repro.core import clear_schedule_cache, dispatch
-from repro.targets import make_gap9_target
+from repro.targets import get_target
 
 from .common import emit, timed
 
 
 def run() -> list[str]:
-    tgt = make_gap9_target()
+    tgt = get_target("gap9")
     cluster = tgt.restricted(["cluster"])
     ne16 = tgt.restricted(["ne16"])
     rows = []

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from repro.cnn import mlperf_tiny_networks
 from repro.core import clear_schedule_cache, dispatch
-from repro.targets import make_diana_target, make_gap9_target
+from repro.targets import get_target
 
 from .common import emit, timed
 
@@ -16,13 +16,13 @@ from .common import emit, timed
 def run() -> list[str]:
     rows = []
     nets = mlperf_tiny_networks()
-    for tname, mk in (("diana", make_diana_target), ("gap9", make_gap9_target)):
+    for tname in ("diana", "gap9"):
         for name in ("MobileNet", "ResNet", "DSCNN", "DAE"):
             g = nets[name]
             pts = []
             us_total = 0.0
             for l1_kb in (128, 64, 48, 32, 24, 16, 12, 8):
-                tgt = mk().scaled_l1(l1_kb * 1024)
+                tgt = get_target(tname).scaled_l1(l1_kb * 1024)
                 clear_schedule_cache()
                 mg, us = timed(dispatch, g, tgt)
                 us_total += us

@@ -2,19 +2,35 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig7,table3,...]
+  PYTHONPATH=src python -m benchmarks.run [--only fig7,table3,...] [--target gap9]
+
+``--target`` takes any registered target name (``repro.targets.registry``,
+see ``list_targets()``) and is forwarded to every benchmark whose ``run``
+accepts one (currently ``dispatch_scaling`` and ``compiled_e2e``) — the
+per-figure benches are pinned to the paper's published SoCs.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument(
+        "--target",
+        default="",
+        help="registered target name for the target-generic benchmarks",
+    )
     args = ap.parse_args()
+
+    if args.target:
+        from repro.targets import get_target
+
+        get_target(args.target)  # fail fast on unknown names
 
     from . import (
         compiled_e2e,
@@ -47,8 +63,11 @@ def main() -> None:
     for name, mod in benches.items():
         if only and name not in only:
             continue
+        kwargs = {}
+        if args.target and "target" in inspect.signature(mod.run).parameters:
+            kwargs["target"] = args.target
         try:
-            mod.run()
+            mod.run(**kwargs)
         except Exception as e:  # keep the suite going, report at the end
             failures += 1
             print(f"{name},0.0,ERROR={type(e).__name__}:{e}", flush=True)

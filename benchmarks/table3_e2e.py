@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from repro.cnn import fits_memory, mlperf_tiny_networks
 from repro.core import dispatch
-from repro.targets import make_diana_target, make_gap9_target
+from repro.targets import get_target
 
 from .common import emit, timed
 
@@ -18,8 +18,8 @@ def run() -> list[str]:
     rows = []
     nets = mlperf_tiny_networks()
     for tname, tgt, l2, pad, reserve in (
-        ("diana", make_diana_target(), 512 * 1024, 16, 128 * 1024),
-        ("gap9", make_gap9_target(), 3 * 512 * 1024, 1, 128 * 1024),
+        ("diana", get_target("diana"), 512 * 1024, 16, 128 * 1024),
+        ("gap9", get_target("gap9"), 3 * 512 * 1024, 1, 128 * 1024),
     ):
         for name, g in nets.items():
             if not fits_memory(g, l2, pad_to=pad, runtime_reserve=reserve):

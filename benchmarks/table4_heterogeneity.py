@@ -6,13 +6,13 @@ from __future__ import annotations
 
 from repro.cnn import mlperf_tiny_networks
 from repro.core import dispatch
-from repro.targets import make_gap9_target
+from repro.targets import get_target
 
 from .common import emit, timed
 
 
 def run() -> list[str]:
-    tgt = make_gap9_target()
+    tgt = get_target("gap9")
     variants = {
         "cpu_only": tgt.restricted([]),
         "cluster_cpu": tgt.restricted(["cluster"]),

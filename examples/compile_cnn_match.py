@@ -17,14 +17,14 @@ from repro.backend import lower
 from repro.cnn import dscnn_graph, init_graph_params
 from repro.core import apply_transforms, dispatch
 from repro.core.graph import dead_node_elimination, integerize, layout_to
-from repro.targets import make_diana_target, make_gap9_target
+from repro.targets import get_target
 
 # 1. network transformations (paper Table II pipeline)
 g = dscnn_graph()
 g = apply_transforms(g, [dead_node_elimination, integerize(1), layout_to("NHWC")])
 
-# 2. heterogeneous dispatch on both targets
-for tgt in (make_gap9_target(), make_diana_target()):
+# 2. heterogeneous dispatch on both targets, resolved by registry name
+for tgt in (get_target("gap9"), get_target("diana")):
     mapped = dispatch(g, tgt)
     mods = {k: f"{v:.0f}cyc" for k, v in mapped.cycles_by_module().items()}
     print(f"{tgt.name:6s}: {mapped.latency_s()*1e3:7.3f} ms  {mods}")
@@ -35,7 +35,7 @@ for tgt in (make_gap9_target(), make_diana_target()):
 #    golden-checked bit-exact against the interpreter
 params = init_graph_params(g)
 x = {k: np.random.default_rng(0).integers(-128, 128, s).astype("float32") for k, s in g.inputs.items()}
-mapped = dispatch(g, make_gap9_target())
+mapped = dispatch(g, "gap9")
 compiled = lower(mapped)
 
 max_err = compiled.verify(params, x)  # runs the interpreter internally
@@ -47,5 +47,5 @@ print(compiled.report())
 # 4. L1 ablation (Fig. 9/10)
 print("\nGAP9 L1 scaling (MACs/cycle):")
 for kb in (128, 32, 8):
-    tgt = make_gap9_target().scaled_l1(kb * 1024)
+    tgt = get_target("gap9").scaled_l1(kb * 1024)
     print(f"  L1={kb:4d}kB -> {dispatch(g, tgt).macs_per_cycle():6.2f}")

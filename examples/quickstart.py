@@ -12,22 +12,24 @@ import jax.numpy as jnp
 import numpy as np
 
 # ---- 1. the paper's flow: heterogeneous dispatch on GAP9 ------------------
+# Every entry point takes a registered target *name* (repro.targets.registry)
 from repro.cnn import resnet8_graph
 from repro.core import dispatch
-from repro.targets import make_gap9_target
+from repro.targets import list_targets
 
+print(f"registered targets: {', '.join(list_targets())}")
 g = resnet8_graph()
-mapped = dispatch(g, make_gap9_target())
+mapped = dispatch(g, "gap9")
 print(mapped.summary())
 print(f"-> predicted latency {mapped.latency_s()*1e3:.3f} ms @260 MHz\n")
 
 # ---- 2. the same engine, TPU target: BlockSpecs for a GEMM ----------------
 from repro.core import matmul_workload, schedule_for_kernel
-from repro.targets import make_tpu_v5e_target
+from repro.targets import get_target
 
 wl = matmul_workload(M=4096, N=6144, KD=6144)
 sched = schedule_for_kernel(
-    wl, make_tpu_v5e_target().module("mxu"), align={"M": "sublane", "N": "lane", "KD": "lane"}
+    wl, get_target("tpu_v5e").module("mxu"), align={"M": "sublane", "N": "lane", "KD": "lane"}
 )
 print(f"TPU GEMM 4096x6144x6144 -> BlockSpec tiles {dict(sched.block)}")
 print(f"   grid order {sched.grid_order}, predicted {sched.predicted_cycles:.3g} cycles\n")

@@ -233,7 +233,7 @@ def _route_of(seg: MappedSegment, use_pallas: bool) -> str:
 
 def lower(
     mapped: MappedGraph,
-    target: MatchTarget | None = None,
+    target: MatchTarget | str | None = None,
     *,
     use_pallas: bool = True,
     band_tiling: bool = True,
@@ -243,7 +243,9 @@ def lower(
 ) -> CompiledModel:
     """Compile a MappedGraph into fused, memory-planned segment executors.
 
-    ``target`` defaults to ``mapped.target``.  ``use_pallas=False`` forces
+    ``target`` defaults to ``mapped.target``; a string is resolved as a
+    registered target name (:mod:`repro.targets.registry`) and must match
+    the target the graph was dispatched on.  ``use_pallas=False`` forces
     dense segments onto the reference route and ``band_tiling=False``
     collapses convs to one whole-array band: together they select the
     "fused" fidelity — same fused segments and memory plan, but the
@@ -252,6 +254,23 @@ def lower(
     is forwarded to the Pallas kernels (True on CPU).
     """
     if target is None:
+        target = mapped.target
+    elif isinstance(target, str):
+        # a name adds no information beyond a consistency check: resolve
+        # it canonically (aliases included) without building a fresh
+        # target, then lower against the dispatch target itself
+        from repro.targets.registry import get_target, target_info
+
+        resolved = target_info(target)["name"]
+        if resolved != mapped.target.name:
+            # registry names need not equal MatchTarget.name (a factory
+            # may decorate it): only the instantiated name is decisive
+            actual = get_target(target).name
+            if actual != mapped.target.name:
+                raise LoweringError(
+                    f"target {actual!r} does not match the dispatch target "
+                    f"{mapped.target.name!r}"
+                )
         target = mapped.target
     elif target is not mapped.target and target.name != mapped.target.name:
         raise LoweringError(

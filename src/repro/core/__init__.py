@@ -21,6 +21,7 @@ from .cost_model import (
 from .dispatcher import MappedGraph, MappedSegment, dispatch
 from .graph import Graph, Node, apply_transforms
 from .loma import (
+    ScheduleCacheWarning,
     SchedulePlanner,
     ScheduleResult,
     TemporalMapping,
@@ -64,6 +65,7 @@ __all__ = [
     "Graph",
     "Node",
     "apply_transforms",
+    "ScheduleCacheWarning",
     "SchedulePlanner",
     "ScheduleResult",
     "TemporalMapping",

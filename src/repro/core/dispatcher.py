@@ -464,7 +464,7 @@ def _dispatch_greedy(
 
 def dispatch(
     graph: Graph,
-    target: MatchTarget,
+    target: MatchTarget | str,
     *,
     budget: int = 4000,
     policy: str = "dp",
@@ -475,11 +475,21 @@ def dispatch(
 ) -> MappedGraph:
     """Partition ``graph`` across ``target``'s execution modules.
 
+    ``target`` is a :class:`MatchTarget` or a registered target *name*
+    (resolved through :mod:`repro.targets.registry` — the agile
+    retargeting entry point).
     ``policy="dp"`` (default) runs the transfer-aware DP partitioner;
     ``policy="greedy"`` keeps the legacy largest-match walk as a baseline.
     ``planner`` / ``cache_path`` control schedule batching and the
     persistent DSE cache (see :class:`~repro.core.loma.SchedulePlanner`).
     """
+    if isinstance(target, str):
+        # late import: repro.targets depends on repro.core, not vice versa
+        # (and an explicit MatchTarget instance must keep working even if
+        # the targets package cannot import)
+        from repro.targets.registry import resolve_target
+
+        target = resolve_target(target)
     if policy == "greedy":
         if planner is not None or cache_path is not None:
             raise ValueError(

@@ -38,6 +38,7 @@ import json
 import math
 import os
 import uuid
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field, replace
 from functools import lru_cache
@@ -52,6 +53,7 @@ __all__ = [
     "TemporalMapping",
     "ScheduleResult",
     "SchedulePlanner",
+    "ScheduleCacheWarning",
     "prime_factors",
     "divisors",
     "tile_candidates",
@@ -513,6 +515,11 @@ def _deserialize_result(d: dict) -> ScheduleResult:
     )
 
 
+class ScheduleCacheWarning(UserWarning):
+    """A persistent schedule cache could not be used (corrupt, stale, or
+    version-mismatched) and a fresh search will run instead."""
+
+
 class SchedulePlanner:
     """Collects DSE queries, dedupes, evaluates in a pool, caches on disk.
 
@@ -549,17 +556,58 @@ class SchedulePlanner:
         self.stats = {"requests": 0, "deduped": 0, "hits": 0, "disk_hits": 0, "searched": 0}
         self._dirty = False
         if self.cache_path is not None and self.cache_path.exists():
-            try:
-                raw = json.loads(self.cache_path.read_text())
-                self._results = {k: _deserialize_result(v) for k, v in raw.items()}
-            except (OSError, ValueError, KeyError, TypeError, AttributeError):
-                self._results = {}  # malformed cache: discard, re-search
+            self._results = self._load_disk_cache()
         # distinguish true disk hits from same-planner in-memory hits
         self._from_disk = set(self._results)
 
     # Bump when evaluate_mapping / the traffic model / the search change
     # semantically: persisted entries from older cost models must miss.
     CACHE_VERSION = 1
+
+    def _load_disk_cache(self) -> dict[str, ScheduleResult]:
+        """Read the persisted cache; any defect warns and falls back to a
+        fresh search — a cache file must never be able to fail a compile."""
+
+        def reject(why: str) -> dict[str, ScheduleResult]:
+            warnings.warn(
+                f"schedule cache {self.cache_path}: {why}; ignoring it and "
+                f"re-running the search",
+                ScheduleCacheWarning,
+                stacklevel=4,
+            )
+            return {}
+
+        try:
+            raw = json.loads(self.cache_path.read_text())
+        except OSError as e:
+            return reject(f"unreadable ({e})")
+        except ValueError as e:
+            return reject(f"corrupt JSON ({e})")
+        if not isinstance(raw, dict) or "entries" not in raw:
+            return reject("unrecognized (pre-versioning or foreign) format")
+        version = raw.get("version")
+        if version != self.CACHE_VERSION:
+            return reject(
+                f"stale version {version!r} (this build writes {self.CACHE_VERSION})"
+            )
+        entries = raw["entries"]
+        if not isinstance(entries, dict):
+            return reject("entries field is not a mapping")
+        results: dict[str, ScheduleResult] = {}
+        bad = 0
+        for k, v in entries.items():
+            try:
+                results[str(k)] = _deserialize_result(v)
+            except (KeyError, TypeError, ValueError, AttributeError):
+                bad += 1
+        if bad:
+            warnings.warn(
+                f"schedule cache {self.cache_path}: skipped {bad} malformed "
+                f"entr{'y' if bad == 1 else 'ies'} (kept {len(results)})",
+                ScheduleCacheWarning,
+                stacklevel=3,
+            )
+        return results
 
     @staticmethod
     def _key(workload: Workload, module: ExecutionModule, budget: int) -> str:
@@ -620,7 +668,10 @@ class SchedulePlanner:
             return
         try:
             self.cache_path.parent.mkdir(parents=True, exist_ok=True)
-            payload = {k: _serialize_result(v) for k, v in self._results.items()}
+            payload = {
+                "version": self.CACHE_VERSION,
+                "entries": {k: _serialize_result(v) for k, v in self._results.items()},
+            }
             tmp = self.cache_path.with_suffix(".tmp")
             tmp.write_text(json.dumps(payload))
             tmp.replace(self.cache_path)

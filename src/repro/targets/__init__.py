@@ -2,16 +2,70 @@
 
 Each file instantiates a :class:`repro.core.MatchTarget` from public
 information only: the paper's published cycle constants for DIANA and
-GAP9, and the TPU v5e datasheet numbers used throughout this repo
-(197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI, 16 MiB VMEM).
+GAP9, the TPU v5e datasheet numbers used throughout this repo
+(197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI, 16 MiB VMEM), and
+the hypothetical NE16-Octa SoC that serves as the one-file porting proof.
 
 Adding a new target is exactly the paper's porting story: write one file
-with memories + spatial unrolling + cost constants + pattern table.  No
-engine code changes.
+with memories + spatial unrolling + cost constants + pattern table, and
+register its factory here (or ship it out-of-tree via
+``MATCH_TARGET_PLUGINS`` / the ``match_repro.targets`` entry-point group
+— see :mod:`repro.targets.registry`).  No engine code changes.  The
+conformance suite (``tests/conformance/``) parametrizes over
+:func:`list_targets` and holds every registered target to the full
+dispatch → lower → run pipeline contract.
 """
 
 from .diana import make_diana_target
 from .gap9 import make_gap9_target
+from .ne16_octa import make_ne16_octa_target
+from .registry import (
+    TargetRegistryError,
+    get_target,
+    list_targets,
+    load_plugins,
+    register_target,
+    resolve_target,
+    target_info,
+    unregister_target,
+)
 from .tpu_v5e import TPUv5eSpec, make_tpu_v5e_target
 
-__all__ = ["make_diana_target", "make_gap9_target", "make_tpu_v5e_target", "TPUv5eSpec"]
+# Builtin targets, registered declaratively: factory + one-line card.
+register_target(
+    "diana",
+    make_diana_target,
+    description="DIANA: RISC-V host + 16x16 digital SIMD array, blocking DMA",
+)
+register_target(
+    "gap9",
+    make_gap9_target,
+    description="GAP9: RISC-V host + 8-core PULP-NN cluster + NE16, shared 128 kB L1",
+)
+register_target(
+    "tpu_v5e",
+    make_tpu_v5e_target,
+    aliases=("v5e",),
+    description="TPU v5e chip: MXU + VPU over HBM->VMEM (Pallas BlockSpec level)",
+)
+register_target(
+    "ne16_octa",
+    make_ne16_octa_target,
+    description="NE16-Octa: hypothetical 16-core cluster + widened NE16 (porting proof)",
+)
+
+__all__ = [
+    "make_diana_target",
+    "make_gap9_target",
+    "make_ne16_octa_target",
+    "make_tpu_v5e_target",
+    "TPUv5eSpec",
+    "TargetRegistryError",
+    "register_target",
+    "unregister_target",
+    "get_target",
+    "resolve_target",
+    "list_targets",
+    "target_info",
+    "load_plugins",
+]

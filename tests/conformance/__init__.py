@@ -1,0 +1,11 @@
+"""Cross-target conformance suite (ISSUE 3).
+
+Parametrized over ``repro.targets.list_targets()`` x the four MLPerf-Tiny
+networks: every registered target — builtin or out-of-tree plugin — must
+survive the full dispatch -> lower -> run pipeline with valid graph
+covers, bit-exact compiled execution, capacity-respecting memory plans,
+monotone cycle accounting and round-tripping schedule caches.  This
+package is the executable form of the paper's Sec. V claim that porting
+to a new SoC is one declarative file: a target that registers itself is
+held to the whole contract automatically.
+"""

@@ -1,0 +1,104 @@
+"""Conformance-suite plumbing: per-target timing summary.
+
+When ``MATCH_CONFORMANCE_TIMINGS`` names a file, the session writes a
+JSON summary of per-test and per-target wall-clock there (the CI matrix
+uploads it as an artifact).  Timings are recorded on the controller via
+``pytest_runtest_logreport`` so the summary also works under
+``pytest-xdist`` (workers forward their reports).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+_TIMINGS: dict[str, float] = {}
+
+
+def _target_in(params: str, known) -> "str | None":
+    """The target name embedded in a pytest param id, hyphen-safe: target
+    names may themselves contain '-', so match whole names at '-'
+    boundaries (longest name first) instead of splitting."""
+    for t in sorted(known, key=len, reverse=True):
+        if (
+            params == t
+            or params.startswith(t + "-")
+            or params.endswith("-" + t)
+            or f"-{t}-" in params
+        ):
+            return t
+    return None
+
+
+def pytest_configure(config):
+    # registered here so runs without pytest-xdist stay warning-free
+    config.addinivalue_line(
+        "markers", "xdist_group(name): assign the test to an xdist load group"
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    """Group parametrized conformance tests by their param id so xdist's
+    ``--dist loadgroup`` keeps every (net, target) combination — and its
+    memoized compile (harness.py lru_caches) — on a single worker.
+
+    When ``MATCH_CONFORMANCE_TARGETED_ONLY`` is set (CI sets it on every
+    matrix shard except one), target-independent conformance tests
+    (registry semantics, packing/transfer-cost properties, cache
+    hardening) are deselected so they run once per CI pass, not once per
+    shard."""
+    for item in items:
+        if "conformance" in item.nodeid and "[" in item.nodeid:
+            params = item.nodeid.rsplit("[", 1)[-1].rstrip("]")
+            item.add_marker(pytest.mark.xdist_group(name=params))
+    if not os.environ.get("MATCH_CONFORMANCE_TARGETED_ONLY"):
+        return
+    from repro.targets import list_targets
+
+    known = set(list_targets())
+    keep, drop = [], []
+    for item in items:
+        if "conformance" in item.nodeid:
+            params = item.nodeid.rsplit("[", 1)[-1].rstrip("]") if "[" in item.nodeid else ""
+            if _target_in(params, known) is None:
+                drop.append(item)
+                continue
+        keep.append(item)
+    if drop:
+        config.hook.pytest_deselected(items=drop)
+        items[:] = keep
+
+
+def pytest_runtest_logreport(report):
+    if report.when == "call" and "conformance" in report.nodeid:
+        _TIMINGS[report.nodeid] = _TIMINGS.get(report.nodeid, 0.0) + report.duration
+
+
+def pytest_sessionfinish(session, exitstatus):
+    path = os.environ.get("MATCH_CONFORMANCE_TIMINGS")
+    if not path or not _TIMINGS:
+        return
+    if hasattr(session.config, "workerinput"):
+        return  # xdist worker: the controller holds the full picture
+    from repro.targets import list_targets
+
+    known = list_targets()
+    per_target: dict[str, dict[str, float]] = {}
+    for nodeid, dur in _TIMINGS.items():
+        params = nodeid.rsplit("[", 1)[-1].rstrip("]") if "[" in nodeid else ""
+        tgt = _target_in(params, known) or "_untargeted"
+        agg = per_target.setdefault(tgt, {"tests": 0, "seconds": 0.0})
+        agg["tests"] += 1
+        agg["seconds"] = round(agg["seconds"] + dur, 3)
+    payload = {
+        "per_target": per_target,
+        "total_seconds": round(sum(_TIMINGS.values()), 3),
+        "tests": {k: round(v, 3) for k, v in sorted(_TIMINGS.items())},
+    }
+    try:
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+    except OSError:
+        pass  # the timing artifact is best-effort, never a test failure

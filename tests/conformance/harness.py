@@ -1,0 +1,78 @@
+"""Shared fixtures/caches for the conformance suite.
+
+``TARGETS`` is computed from :func:`repro.targets.list_targets` at import
+time, optionally filtered by the ``MATCH_CONFORMANCE_TARGETS`` env var
+(comma-separated names) — that is how the CI per-target matrix shards the
+suite.  Compiled models and dispatch results are memoized per
+(net, target) so every test module prices one compile, not one per test.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import lru_cache
+
+import numpy as np
+
+from repro.backend import lower
+from repro.cnn import init_graph_params, mlperf_tiny_networks
+from repro.core import dispatch
+from repro.targets import list_targets
+
+# Keyed into the process-wide schedule cache; matches tests/test_backend.py
+# so the two suites share DSE results within one pytest process.
+BUDGET = 300
+
+NETS = ("MobileNet", "ResNet", "DSCNN", "DAE")
+
+
+def conformance_targets() -> list[str]:
+    names = list_targets()
+    allow = {
+        t.strip()
+        for t in os.environ.get("MATCH_CONFORMANCE_TARGETS", "").split(",")
+        if t.strip()
+    }
+    if allow:
+        from repro.targets import TargetRegistryError, target_info
+
+        canon = set()
+        for t in sorted(allow):  # aliases resolve, like every entry point
+            try:
+                canon.add(target_info(t)["name"])
+            except TargetRegistryError:
+                raise ValueError(
+                    f"MATCH_CONFORMANCE_TARGETS names unknown target {t!r}; "
+                    f"registered: {names}"
+                ) from None
+        names = [n for n in names if n in canon]
+    return names
+
+
+TARGETS = conformance_targets()
+
+
+@lru_cache(maxsize=None)
+def graph_for(net: str):
+    return mlperf_tiny_networks()[net]
+
+
+@lru_cache(maxsize=None)
+def mapped_for(net: str, tname: str):
+    return dispatch(graph_for(net), tname, budget=BUDGET)
+
+
+@lru_cache(maxsize=None)
+def compiled_for(net: str, tname: str):
+    return lower(mapped_for(net, tname), tname)
+
+
+@lru_cache(maxsize=None)
+def io_for(net: str):
+    g = graph_for(net)
+    params = init_graph_params(g)
+    x = {
+        k: np.random.default_rng(0).integers(-128, 128, s).astype("float32")
+        for k, s in g.inputs.items()
+    }
+    return params, x

@@ -1,0 +1,106 @@
+"""Schedule-cache conformance: warm == cold for every target, and the
+persistent JSON cache degrades gracefully (corrupt / stale / mismatched
+files warn and fall back to a fresh search — never raise)."""
+
+import json
+
+import pytest
+
+from repro.cnn import conv_block_graph
+from repro.core import (
+    ScheduleCacheWarning,
+    SchedulePlanner,
+    clear_schedule_cache,
+    dispatch,
+)
+
+from .harness import BUDGET, TARGETS, graph_for
+
+
+@pytest.fixture(autouse=True)
+def _no_env_schedule_cache(monkeypatch):
+    monkeypatch.delenv("MATCH_SCHEDULE_CACHE", raising=False)
+
+
+@pytest.mark.parametrize("tname", TARGETS)
+def test_schedule_cache_roundtrips_warm_equals_cold(tname, tmp_path):
+    """For every registered target: a warm (disk-cache-only) dispatch must
+    reproduce the cold mapping exactly without running a single search."""
+    g = graph_for("DSCNN")
+    cache = tmp_path / f"{tname}.json"
+
+    clear_schedule_cache()
+    cold = SchedulePlanner(cache_path=cache)
+    mg_cold = dispatch(g, tname, planner=cold, budget=BUDGET)
+    assert cache.exists()
+    assert cold.stats["searched"] > 0
+
+    clear_schedule_cache()  # the warm run may only use the on-disk cache
+    warm = SchedulePlanner(cache_path=cache)
+    mg_warm = dispatch(g, tname, planner=warm, budget=BUDGET)
+    assert warm.stats["searched"] == 0
+    assert warm.stats["disk_hits"] > 0
+    assert mg_warm.total_cycles() == pytest.approx(mg_cold.total_cycles())
+    assert [s.module for s in mg_warm.segments] == [s.module for s in mg_cold.segments]
+    assert [s.pattern for s in mg_warm.segments] == [s.pattern for s in mg_cold.segments]
+
+
+# ---------------------------------------------------------------------------
+# Cache-file hardening (corrupt / stale / legacy formats)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_dispatch(planner):
+    g = conv_block_graph(IX=8, IY=8, C=8, K=8)
+    return dispatch(g, "gap9", planner=planner, budget=BUDGET)
+
+
+@pytest.mark.parametrize(
+    "payload, why",
+    [
+        ("{not json", "corrupt JSON"),
+        ("[]", "unrecognized"),
+        ('{"k": "flat-legacy-entry"}', "unrecognized"),
+        ('{"version": 0, "entries": {}}', "stale version"),
+        ('{"version": 1, "entries": []}', "not a mapping"),
+    ],
+)
+def test_bad_cache_files_warn_and_fall_back(tmp_path, payload, why):
+    cache = tmp_path / "schedules.json"
+    cache.write_text(payload)
+    with pytest.warns(ScheduleCacheWarning, match=why):
+        planner = SchedulePlanner(cache_path=cache)
+    mg = _tiny_dispatch(planner)  # compiles fine from a fresh search
+    assert mg.total_cycles() > 0
+    assert planner.stats["searched"] > 0
+    # and the defective file is replaced by a valid versioned cache
+    raw = json.loads(cache.read_text())
+    assert raw["version"] == SchedulePlanner.CACHE_VERSION
+    assert isinstance(raw["entries"], dict) and raw["entries"]
+
+
+def test_malformed_entries_skipped_but_good_ones_kept(tmp_path):
+    cache = tmp_path / "schedules.json"
+    clear_schedule_cache()
+    _tiny_dispatch(SchedulePlanner(cache_path=cache))
+    raw = json.loads(cache.read_text())
+    assert len(raw["entries"]) >= 2
+    bad_key = sorted(raw["entries"])[0]
+    raw["entries"][bad_key] = {"garbage": True}
+    cache.write_text(json.dumps(raw))
+
+    with pytest.warns(ScheduleCacheWarning, match="malformed"):
+        planner = SchedulePlanner(cache_path=cache)
+    assert len(planner._results) == len(raw["entries"]) - 1
+    clear_schedule_cache()
+    mg = _tiny_dispatch(planner)  # the dropped entry re-searches
+    assert planner.stats["searched"] >= 1
+    assert planner.stats["disk_hits"] >= 1
+    assert mg.total_cycles() > 0
+
+
+def test_unreadable_cache_warns(tmp_path):
+    cache = tmp_path / "locked"
+    cache.mkdir()  # reading a directory raises OSError
+    with pytest.warns(ScheduleCacheWarning, match="unreadable"):
+        SchedulePlanner(cache_path=cache)

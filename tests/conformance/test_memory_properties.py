@@ -1,0 +1,108 @@
+"""Property tests for the static memory planner's offset assignment.
+
+Random liveness intervals (hypothesis when installed, a seeded sweep
+otherwise — the container image does not ship hypothesis) must always
+produce: pairwise-disjoint placements for time-overlapping buffers, a
+peak no smaller than the true concurrent-bytes lower bound, no larger
+than the sum of all buffers, and a hill-climb that never regresses the
+first-fit peak.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.backend.memory import _first_fit, _hill_climb
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+
+Lives = "dict[str, tuple[int, int, int]]"  # name -> (nbytes, start, end)
+
+
+def _assert_packing_invariants(lives) -> None:
+    if not lives:
+        return
+    order = sorted(lives)
+    for label, (offsets, peak) in (
+        ("first_fit", _first_fit(order, lives)),
+        ("hill_climb", _hill_climb(order, lives, 40, 0)),
+    ):
+        placed = [(n, offsets[n], *lives[n]) for n in order]
+        # 1. disjoint in space whenever live ranges overlap in time
+        for i, (n1, o1, b1, s1, e1) in enumerate(placed):
+            assert o1 >= 0
+            for n2, o2, b2, s2, e2 in placed[i + 1 :]:
+                if e1 <= s2 or e2 <= s1:
+                    continue  # never simultaneously live
+                assert o1 + b1 <= o2 or o2 + b2 <= o1, (label, n1, n2)
+        # 2. peak covers every placement and respects the two bounds
+        assert peak >= max(o + b for _, o, b, _, _ in placed)
+        ticks = sorted({s for _, _, _, s, _ in placed} | {e for _, _, _, _, e in placed})
+        lower = max(
+            sum(b for _, _, b, s, e in placed if s <= t < e) for t in ticks
+        )
+        assert peak >= lower, (label, peak, lower)
+        assert peak <= sum(b for _, _, b, _, _ in placed)
+    # 3. the hill-climb may only improve on first-fit
+    _, ff_peak = _first_fit(order, lives)
+    _, hc_peak = _hill_climb(order, lives, 40, 0)
+    assert hc_peak <= ff_peak
+
+
+def _random_lives(seed: int):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 24))
+    lives = {}
+    for i in range(n):
+        start = int(rng.integers(0, 12))
+        lives[f"b{i}"] = (
+            int(rng.integers(1, 4096)),
+            start,
+            start + int(rng.integers(1, 8)),
+        )
+    return lives
+
+
+@pytest.mark.parametrize("seed", range(30))
+def test_packing_invariants_seeded(seed):
+    _assert_packing_invariants(_random_lives(seed))
+
+
+def test_packing_degenerate_cases():
+    _assert_packing_invariants({})
+    _assert_packing_invariants({"one": (64, 0, 1)})
+    # all buffers simultaneously live: peak must be the exact sum
+    lives = {f"b{i}": (100, 0, 5) for i in range(6)}
+    _, peak = _first_fit(sorted(lives), lives)
+    assert peak == 600
+    # fully disjoint in time: everything can share offset 0
+    lives = {f"b{i}": (100, i, i + 1) for i in range(6)}
+    offsets, peak = _first_fit(sorted(lives), lives)
+    assert peak == 100
+    assert set(offsets.values()) == {0}
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=120, deadline=None)
+    @given(
+        st.dictionaries(
+            keys=st.text(alphabet="abcdef", min_size=1, max_size=4),
+            values=st.tuples(
+                st.integers(min_value=1, max_value=1 << 16),
+                st.integers(min_value=0, max_value=16),
+                st.integers(min_value=1, max_value=8),
+            ).map(lambda t: (t[0], t[1], t[1] + t[2])),
+            max_size=24,
+        )
+    )
+    def test_packing_invariants_hypothesis(lives):
+        _assert_packing_invariants(lives)

@@ -1,0 +1,253 @@
+"""Registry semantics + the out-of-tree one-file porting proof."""
+
+import numpy as np
+import pytest
+
+from repro.backend import LoweringError, lower
+from repro.cnn import conv_block_graph, init_graph_params
+from repro.core import MatchTarget, dispatch
+from repro.targets import (
+    TargetRegistryError,
+    get_target,
+    list_targets,
+    load_plugins,
+    make_gap9_target,
+    register_target,
+    resolve_target,
+    target_info,
+    unregister_target,
+)
+
+from .harness import BUDGET
+
+BUILTINS = {"diana", "gap9", "tpu_v5e", "ne16_octa"}
+
+
+def test_builtins_registered():
+    assert BUILTINS <= set(list_targets())
+
+
+def test_get_target_returns_fresh_instances():
+    a, b = get_target("gap9"), get_target("gap9")
+    assert a is not b
+    assert a.name == b.name == "gap9"
+    # pattern tables are per-instance: mutating one must not leak
+    a.modules[0].patterns.clear()
+    assert b.modules[0].patterns
+
+
+def test_aliases_resolve_to_canonical_target():
+    assert get_target("v5e").name == "tpu_v5e"
+    assert target_info("v5e")["name"] == "tpu_v5e"
+
+
+def test_unknown_target_raises_with_known_names():
+    with pytest.raises(TargetRegistryError) as e:
+        get_target("imaginary_soc")
+    msg = str(e.value)
+    assert "imaginary_soc" in msg and "gap9" in msg
+
+
+def test_duplicate_registration_requires_overwrite():
+    with pytest.raises(TargetRegistryError):
+        register_target("gap9", make_gap9_target)
+    try:
+        register_target("tmp_dup", make_gap9_target)
+        with pytest.raises(TargetRegistryError):
+            register_target("tmp_dup", make_gap9_target)
+        register_target("tmp_dup", make_gap9_target, overwrite=True)
+    finally:
+        unregister_target("tmp_dup")
+    assert "tmp_dup" not in list_targets()
+
+
+def test_overwrite_retires_stale_aliases():
+    """Re-registering a name (or taking over an alias) must not leave
+    dangling alias records a later unregister could delete wrongly."""
+    try:
+        register_target("t1", make_gap9_target, aliases=("shared_alias",))
+        register_target("t2", make_gap9_target, aliases=("shared_alias",), overwrite=True)
+        assert get_target("shared_alias").name == "gap9"
+        assert target_info("shared_alias")["name"] == "t2"
+        unregister_target("t1")  # t1 no longer owns the alias: must survive
+        assert target_info("shared_alias")["name"] == "t2"
+        # overwriting t2 without the alias retires it for good
+        register_target("t2", make_gap9_target, overwrite=True)
+        with pytest.raises(TargetRegistryError):
+            target_info("shared_alias")
+    finally:
+        unregister_target("t1")
+        unregister_target("t2")
+
+
+def test_overwrite_claims_a_name_that_was_an_alias():
+    """register_target(<existing alias>, overwrite=True) must make the new
+    canonical entry reachable — not leave lookups resolving through the
+    stale alias to the old owner."""
+    from repro.targets import make_diana_target
+
+    try:
+        register_target("v5e", make_diana_target, overwrite=True)
+        assert get_target("v5e").name == "diana"
+        assert target_info("v5e")["name"] == "v5e"
+        assert target_info("tpu_v5e")["aliases"] == ()  # alias retired
+    finally:
+        unregister_target("v5e")
+        # restore the builtin alias for the rest of the session
+        from repro.targets import make_tpu_v5e_target
+
+        register_target(
+            "tpu_v5e",
+            make_tpu_v5e_target,
+            aliases=("v5e",),
+            description=target_info("tpu_v5e")["description"],
+            overwrite=True,
+        )
+    assert get_target("v5e").name == "tpu_v5e"
+
+
+def test_plugin_name_collision_warns_not_silently_truncates(tmp_path, monkeypatch):
+    """A plugin that collides with a builtin name must warn — not silently
+    drop the rest of the plugin file."""
+    plugin = tmp_path / "collide.py"
+    plugin.write_text(
+        "from repro.targets import make_gap9_target, register_target\n"
+        "register_target('gap9', make_gap9_target)\n"  # collision, no overwrite
+        "register_target('after_collision', make_gap9_target)\n"
+    )
+    monkeypatch.setenv("MATCH_TARGET_PLUGINS", str(plugin))
+    try:
+        with pytest.warns(UserWarning, match="failed to load"):
+            load_plugins(force=True)
+        assert "after_collision" not in list_targets()  # lost — but loudly
+        assert get_target("gap9").name == "gap9"  # builtin untouched
+    finally:
+        unregister_target("after_collision")
+
+
+def test_non_factory_and_bad_name_rejected():
+    with pytest.raises(TargetRegistryError):
+        register_target("", make_gap9_target)
+    with pytest.raises(TargetRegistryError):
+        register_target("not_callable", object())
+    try:
+        register_target("bad_factory", lambda: 42)
+        with pytest.raises(TargetRegistryError):
+            get_target("bad_factory")
+    finally:
+        unregister_target("bad_factory")
+
+
+def test_resolve_target_passthrough_and_by_name():
+    t = get_target("diana")
+    assert resolve_target(t) is t
+    assert isinstance(resolve_target("diana"), MatchTarget)
+
+
+def test_dispatch_and_lower_accept_names():
+    g = conv_block_graph(IX=8, IY=8, C=8, K=8)
+    by_name = dispatch(g, "gap9", budget=BUDGET)
+    by_inst = dispatch(g, get_target("gap9"), budget=BUDGET)
+    assert [s.module for s in by_name.segments] == [s.module for s in by_inst.segments]
+    assert by_name.total_cycles() == pytest.approx(by_inst.total_cycles())
+    cm = lower(by_name, "gap9")
+    assert cm.target.name == "gap9"
+    with pytest.raises(LoweringError):
+        lower(by_name, "diana")
+
+
+# ---------------------------------------------------------------------------
+# The porting story, end to end: ONE out-of-tree file adds a working target
+# ---------------------------------------------------------------------------
+
+_PLUGIN_SRC = '''
+"""Out-of-tree MatchTarget: the entire port is this file."""
+
+from repro.core import (
+    ComputeModel, ExecutionModule, Interconnect, MatchTarget, MemoryLevel,
+    SpatialUnrolling,
+)
+from repro.core.patterns import conv_chain_pattern
+from repro.targets import register_target
+
+
+def _cpu():
+    return ExecutionModule(
+        name="cpu",
+        memories=(MemoryLevel("dcache", 32 * 1024, 4.0), MemoryLevel("L2", 1 << 20, 4.0)),
+        spatial={"*": SpatialUnrolling(dims={})},
+        compute=ComputeModel(cycles_per_iter=3.0, output_elem_overhead=2.0),
+        supported_ops=("conv2d", "dwconv2d", "dense", "elementwise", "pool"),
+    )
+
+
+def make_plugin_soc():
+    accel = ExecutionModule(
+        name="npu",
+        memories=(
+            MemoryLevel("L1", 64 * 1024, 8.0, chunk_overhead=30.0),
+            MemoryLevel("L2", 1 << 20, 8.0),
+        ),
+        spatial={"conv2d": SpatialUnrolling({"K": 8, "OX": 8})},
+        compute=ComputeModel(cycles_per_iter=1.0, output_elem_overhead=0.1),
+        async_dma=True,
+        double_buffer=True,
+        supported_ops=("conv2d",),
+        handoff_cycles=40.0,
+    )
+    accel.patterns = [
+        conv_chain_pattern("np_conv_bias_requant", ("bias_add", "requant")),
+        conv_chain_pattern("np_conv", ()),
+    ]
+    return MatchTarget(
+        name="plugin_soc",
+        modules=[accel],
+        fallback=_cpu(),
+        interconnect=Interconnect(bandwidth=8.0, hop_latency=30.0),
+    )
+
+
+register_target(
+    "plugin_soc", make_plugin_soc,
+    description="out-of-tree test SoC", source="plugin", overwrite=True,
+)
+'''
+
+
+def test_one_file_plugin_target_runs_the_whole_pipeline(tmp_path, monkeypatch):
+    """MATCH_TARGET_PLUGINS points at a single .py file; the target it
+    registers survives dispatch -> lower -> bit-exact run without any
+    engine change — the paper's agile-retargeting claim, executed."""
+    plugin = tmp_path / "plugin_soc.py"
+    plugin.write_text(_PLUGIN_SRC)
+    monkeypatch.setenv("MATCH_TARGET_PLUGINS", str(plugin))
+    try:
+        load_plugins(force=True)
+        assert "plugin_soc" in list_targets()
+        assert target_info("plugin_soc")["source"] == "plugin"
+
+        g = conv_block_graph(IX=16, IY=16, C=8, K=8)
+        mg = dispatch(g, "plugin_soc", budget=BUDGET)
+        assert {n.name for s in mg.segments for n in s.nodes} == {n.name for n in g.nodes}
+        assert any(s.module == "npu" for s in mg.segments)  # the accel is used
+
+        cm = lower(mg, "plugin_soc")
+        params = init_graph_params(g)
+        x = {
+            k: np.random.default_rng(0).integers(-128, 128, s).astype("float32")
+            for k, s in g.inputs.items()
+        }
+        assert cm.verify(params, x) == 0.0
+        cm.memory_plan.validate()
+    finally:
+        unregister_target("plugin_soc")
+
+
+def test_broken_plugin_warns_but_does_not_break_builtins(tmp_path, monkeypatch):
+    plugin = tmp_path / "broken.py"
+    plugin.write_text("raise RuntimeError('intentionally broken plugin')\n")
+    monkeypatch.setenv("MATCH_TARGET_PLUGINS", str(plugin))
+    with pytest.warns(UserWarning, match="failed to load"):
+        load_plugins(force=True)
+    assert BUILTINS <= set(list_targets())
+    assert get_target("gap9").name == "gap9"

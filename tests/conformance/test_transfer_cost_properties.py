@@ -1,0 +1,118 @@
+"""Property tests for the cross-module transfer-cost model edge cases:
+zero-byte edges, same-module (and single-module-target) graphs, and the
+missing-``Interconnect`` fallback.  Hypothesis when installed; a seeded
+sweep otherwise (the container image does not ship hypothesis)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.cnn import conv_block_graph
+from repro.core import (
+    ComputeModel,
+    ExecutionModule,
+    Interconnect,
+    MemoryLevel,
+    SpatialUnrolling,
+    dispatch,
+    transfer_cost,
+)
+from repro.targets import get_target
+
+from .harness import BUDGET
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+
+def _module(name: str, *, async_dma: bool = True, handoff: float = 0.0) -> ExecutionModule:
+    return ExecutionModule(
+        name=name,
+        memories=(MemoryLevel("L1", 1 << 16, 8.0), MemoryLevel("L2", 1 << 20, 8.0)),
+        spatial={"*": SpatialUnrolling({})},
+        compute=ComputeModel(),
+        async_dma=async_dma,
+        double_buffer=async_dma,
+        supported_ops=("conv2d", "elementwise"),
+        handoff_cycles=handoff,
+    )
+
+
+def _check_properties(nbytes: float, bw: float, hop: float, h_src: float, h_dst: float):
+    src = _module("src", handoff=h_src)
+    dst = _module("dst", handoff=h_dst)
+    ic = Interconnect(bandwidth=bw, hop_latency=hop)
+    cost = transfer_cost(nbytes, src, dst, ic)
+    fixed = hop + h_src + h_dst
+    # finite, and never below the fixed handoff floor
+    assert math.isfinite(cost)
+    assert cost >= fixed - 1e-9
+    # zero-byte edges pay exactly the fixed overheads
+    assert transfer_cost(0.0, src, dst, ic) == pytest.approx(fixed)
+    # negative byte counts clamp to the zero-byte cost (never negative)
+    assert transfer_cost(-abs(nbytes), src, dst, ic) == pytest.approx(fixed)
+    # monotone in bytes
+    assert transfer_cost(nbytes * 2.0, src, dst, ic) >= cost - 1e-9
+    # same module: free, regardless of everything else
+    assert transfer_cost(nbytes, src, src, ic) == 0.0
+    # a blocking endpoint exposes write-back + refetch: >= the async cost
+    sync_src = dataclasses.replace(src, spatial=src.spatial)
+    sync_src.async_dma = False
+    assert transfer_cost(nbytes, sync_src, dst, ic) >= cost - 1e-9
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_transfer_cost_properties_seeded(seed):
+    rng = np.random.default_rng(seed)
+    _check_properties(
+        nbytes=float(rng.integers(0, 1 << 20)),
+        bw=float(rng.uniform(0.5, 1024.0)),
+        hop=float(rng.uniform(0.0, 1000.0)),
+        h_src=float(rng.uniform(0.0, 500.0)),
+        h_dst=float(rng.uniform(0.0, 500.0)),
+    )
+
+
+def test_missing_interconnect_falls_back_to_defaults():
+    """``interconnect=None`` must behave exactly like the default
+    Interconnect (8 B/cycle, 100-cycle hop), not crash or zero out."""
+    a, b = _module("a"), _module("b")
+    d = Interconnect()
+    assert transfer_cost(4096, a, b, None) == pytest.approx(
+        transfer_cost(4096, a, b, d)
+    )
+    assert transfer_cost(0, a, b, None) == pytest.approx(d.hop_latency)
+
+
+def test_single_module_graph_has_zero_transfer_cycles():
+    """A target restricted to its fallback runs everything on one module:
+    no edge can cross modules, so dispatch must charge zero transfers."""
+    g = conv_block_graph(IX=16, IY=16, C=8, K=8)
+    cpu_only = get_target("gap9").restricted([])
+    mg = dispatch(g, cpu_only, budget=BUDGET)
+    assert mg.transfer_cycles() == 0.0
+    assert {s.module for s in mg.segments} == {"cpu"}
+    assert mg.total_cycles() == pytest.approx(mg.compute_cycles())
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=150, deadline=None)
+    @given(
+        nbytes=st.floats(min_value=0.0, max_value=1e9, allow_nan=False),
+        bw=st.floats(min_value=1e-3, max_value=4096.0, allow_nan=False),
+        hop=st.floats(min_value=0.0, max_value=1e6, allow_nan=False),
+        h_src=st.floats(min_value=0.0, max_value=1e6, allow_nan=False),
+        h_dst=st.floats(min_value=0.0, max_value=1e6, allow_nan=False),
+    )
+    def test_transfer_cost_properties_hypothesis(nbytes, bw, hop, h_src, h_dst):
+        _check_properties(nbytes, bw, hop, h_src, h_dst)

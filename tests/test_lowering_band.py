@@ -1,0 +1,75 @@
+"""Regression guard for the PR 2 lowering contract: conv segments are
+lowered through ``tiled_conv2d`` with the band size pinned to the winning
+LOMA schedule's OY tile (the L1-resident output stripe) — lowering never
+re-runs the DSE and never invents its own tiling."""
+
+import numpy as np
+import pytest
+
+from repro.backend import lower
+from repro.cnn import conv_block_graph, init_graph_params
+from repro.core import dispatch, schedule_from_result
+
+# Golden geometries: small (whole-array band fits L1), mid, L1-pressured
+# (banding must engage), and the DSCNN rectangular first layer.
+GEOMS = {
+    "small_16x16x16": dict(IX=16, IY=16, C=16, K=16),
+    "mid_32x32x32": dict(IX=32, IY=32, C=32, K=32),
+    "banded_64x64x16": dict(IX=64, IY=64, C=16, K=16),
+    "dscnn_first_4x10": dict(IX=10, IY=49, C=1, K=64, FY=10, FX=4, stride=2),
+}
+
+
+def _conv_lowered(geom):
+    g = conv_block_graph(**geom)
+    mapped = dispatch(g, "gap9", budget=300)
+    cm = lower(mapped)
+    ls = next(ls for ls in cm.segments if ls.segment.anchor.op == "conv2d")
+    return g, mapped, cm, ls
+
+
+@pytest.mark.parametrize("name", sorted(GEOMS))
+def test_band_size_is_the_loma_oy_tile(name):
+    geom = GEOMS[name]
+    g, mapped, cm, ls = _conv_lowered(geom)
+    assert ls.route == "tiled_conv"
+    seg = ls.segment
+    oy = int(seg.anchor.attr("OY"))
+
+    # the contract: block_oy == the stored winning schedule's OY tile,
+    # clamped to [1, OY] exactly as schedule_from_result reports it
+    module = mapped.target.module(seg.module)
+    ksched = schedule_from_result(seg.schedule, seg.workload, module)
+    want = max(1, min(int(ksched.block_of("OY", oy)), oy))
+    assert ls.meta["block_oy"] == want
+    assert ls.kernel_schedule is not None
+    assert ls.kernel_schedule.block_of("OY", oy) == ksched.block_of("OY", oy)
+
+    # and the banded executor stays bit-exact at that band size
+    params = init_graph_params(g)
+    x = {
+        k: np.random.default_rng(0).integers(-128, 128, s).astype("float32")
+        for k, s in g.inputs.items()
+    }
+    assert cm.verify(params, x) == 0.0
+
+
+def test_l1_pressure_forces_a_proper_band():
+    """The 64x64x16x16 block cannot sit whole in the 128 kB L1: the DSE
+    must have tiled OY, and lowering must inherit that band — a silent
+    whole-array band here would mean the contract regressed."""
+    _, mapped, _, ls = _conv_lowered(GEOMS["banded_64x64x16"])
+    oy = int(ls.segment.anchor.attr("OY"))
+    assert 1 <= ls.meta["block_oy"] < oy
+    tiles = dict(ls.segment.schedule.mapping.tiles)
+    assert ls.meta["block_oy"] == max(1, min(int(tiles.get("OY", oy)), oy))
+
+
+def test_band_tiling_off_collapses_to_one_band():
+    """The fused fidelity (band_tiling=False) runs one whole-array band
+    regardless of the schedule — same segments, fastest host path."""
+    g = conv_block_graph(**GEOMS["mid_32x32x32"])
+    mapped = dispatch(g, "gap9", budget=300)
+    fused = lower(mapped, band_tiling=False)
+    ls = next(ls for ls in fused.segments if ls.segment.anchor.op == "conv2d")
+    assert ls.meta["block_oy"] == int(ls.segment.anchor.attr("OY"))
