@@ -1,0 +1,158 @@
+"""Predicted-vs-measured accuracy, before/after calibration (PR 4).
+
+The closed-loop check of the calibration subsystem: run the microbench
+sweep on one target, fit a :class:`~repro.calibrate.CalibrationProfile`,
+then — on the four MLPerf-Tiny nets — compare mean |predicted - measured|
+segment cycles under the declared model vs under the fitted profile.
+
+Two calibrated views are reported:
+
+* **recompiled** — a full re-dispatch/re-lower under the calibrated
+  target, so its predictions are what a user deploying with the profile
+  actually sees (the re-ranked DSE included).  This closed-loop number
+  is the strict gate: this module raises unless it beats the
+  uncalibrated error, which is what the CI calibration smoke job
+  enforces.  Caveat: the calibrated DSE may also change segmentation
+  granularity, which feeds into per-segment absolute errors — hence the
+  second view.
+* **same-mapping** — the fitted linear corrections applied to the
+  *declared* compile's own segments/measurements (identical
+  segmentation, granularity controlled).  Reported as a diagnostic; it
+  compares measurements taken at sweep time against measurements taken
+  at net time, so on a noisy host it fluctuates more than the
+  closed-loop number and does not gate.
+
+Emits the usual CSV rows, writes ``calibration_accuracy.json`` (per-net
+errors + summary) and ``calibration_profile.json`` (the fitted profile —
+uploaded as a CI artifact).  ``MATCH_CALIB_QUICK=1`` shrinks the sweep
+and the timing repeats for smoke runs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+
+from repro.backend import lower
+from repro.calibrate import fit_profile, profile_errors, run_microbench
+from repro.cnn import mlperf_tiny_networks
+from repro.core import dispatch
+from repro.targets import get_target
+
+from .common import emit, target_prefix
+
+BUDGET = 300
+
+
+def _net_samples(g, tgt, repeats: int):
+    """Microbench-style samples for one net on one (possibly calibrated)
+    target instance: dispatch + lower + timed runs, min per segment."""
+    from repro.calibrate import collect_samples, graph_io
+
+    mapped = dispatch(g, tgt, budget=BUDGET)
+    compiled = lower(mapped)
+    params, x = graph_io(g)
+    return collect_samples(compiled, params, x, repeats=repeats)
+
+
+def _mae(samples) -> float:
+    if not samples:
+        return 0.0
+    return float(
+        np.mean([abs(s.predicted_cycles - s.measured_cycles) for s in samples])
+    )
+
+
+def run(
+    out_path: str | None = "calibration_accuracy.json",
+    target: str = "gap9",
+    profile_out: str | None = "calibration_profile.json",
+) -> list[str]:
+    quick = bool(os.environ.get("MATCH_CALIB_QUICK"))
+    repeats = 2 if quick else 3
+    rows: list[str] = []
+    tgt_name = get_target(target, profile=None).name
+    prefix, out_path = target_prefix(tgt_name, out_path, "calibration_accuracy.json")
+    if profile_out and prefix:
+        profile_out = f"{profile_out[:-len('.json')]}_{tgt_name}.json"
+
+    # 1. measure the microbench sweep + fit the profile
+    sweep = run_microbench(target, repeats=repeats, budget=BUDGET, quick=quick)
+    profile = fit_profile(
+        sweep, target_name=tgt_name, meta={"quick": quick, "repeats": repeats}
+    )
+    fit_errs = profile_errors(sweep, profile)
+    if profile_out:
+        profile.save(profile_out)
+    rows.append(
+        emit(
+            f"calibration_fit_{prefix}{tgt_name}",
+            0.0,
+            f"samples={fit_errs['n']};mae_before={fit_errs['mae_before']:.0f};"
+            f"mae_after={fit_errs['mae_after']:.0f};profile={profile.tag()}",
+        )
+    )
+
+    # 2. per-net predicted-vs-measured error, declared vs calibrated model
+    summary: dict = {"target": tgt_name, "profile": profile.tag(), "nets": {}}
+    uncal_all: list = []
+    recompiled_all: list = []
+    for name, g in mlperf_tiny_networks().items():
+        uncal = _net_samples(g, get_target(target, profile=None), repeats)
+        recompiled = _net_samples(g, get_target(target, profile=profile), repeats)
+        uncal_all.extend(uncal)
+        recompiled_all.extend(recompiled)
+        mae_b = _mae(uncal)
+        mae_same = profile_errors(uncal, profile)["mae_after"]
+        mae_rec = _mae(recompiled)
+        summary["nets"][name] = {
+            "segments_uncalibrated": len(uncal),
+            "segments_recompiled": len(recompiled),
+            "mae_cycles_uncalibrated": mae_b,
+            "mae_cycles_calibrated_same_mapping": mae_same,
+            "mae_cycles_calibrated_recompiled": mae_rec,
+        }
+        rows.append(
+            emit(
+                f"calibration_accuracy_{prefix}{name}",
+                0.0,
+                f"mae_uncal={mae_b:.0f};mae_cal={mae_rec:.0f};"
+                f"mae_same_mapping={mae_same:.0f};"
+                f"improvement={mae_b / max(mae_rec, 1e-9):.2f}x",
+            )
+        )
+
+    mae_before = _mae(uncal_all)
+    mae_after = profile_errors(uncal_all, profile)["mae_after"]
+    mae_recompiled = _mae(recompiled_all)
+    summary["mae_cycles_uncalibrated"] = mae_before
+    summary["mae_cycles_calibrated_same_mapping"] = mae_after
+    summary["mae_cycles_calibrated_recompiled"] = mae_recompiled
+    summary["fit"] = fit_errs
+    rows.append(
+        emit(
+            f"calibration_accuracy_{prefix}mean",
+            0.0,
+            f"mae_uncal={mae_before:.0f};mae_cal={mae_recompiled:.0f};"
+            f"mae_same_mapping={mae_after:.0f};"
+            f"improvement={mae_before / max(mae_recompiled, 1e-9):.2f}x",
+        )
+    )
+    if out_path:
+        Path(out_path).write_text(json.dumps(summary, indent=2, sort_keys=True))
+    print(f"calibration_accuracy JSON: {json.dumps(summary, sort_keys=True)}", flush=True)
+
+    if not mae_recompiled < mae_before:
+        raise AssertionError(
+            f"calibration did not improve predicted-vs-measured accuracy on "
+            f"{tgt_name}: {mae_before:.0f} -> {mae_recompiled:.0f} mean |cycles| "
+            f"error (compile-with-profile vs compile-without)"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -14,10 +14,23 @@ def timed(fn, *args, repeats: int = 1, **kw):
     return out, dt * 1e6  # microseconds
 
 
+# structured copies of every emitted row, drained by benchmarks.run for
+# its --json results mode (printing stays CSV for the bench trajectory)
+_ROWS: list[dict] = []
+
+
 def emit(name: str, us_per_call: float, derived: str) -> str:
     row = f"{name},{us_per_call:.1f},{derived}"
+    _ROWS.append({"name": name, "us_per_call": us_per_call, "derived": derived})
     print(row, flush=True)
     return row
+
+
+def drain_rows() -> list[dict]:
+    """Structured rows emitted since the last drain (for --json output)."""
+    out = list(_ROWS)
+    _ROWS.clear()
+    return out
 
 
 def target_prefix(tgt_name: str, out_path, default_json: str, baseline: str = "gap9"):

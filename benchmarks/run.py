@@ -3,17 +3,23 @@
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig7,table3,...] [--target gap9]
+                                          [--list-targets] [--json [PATH]]
 
 ``--target`` takes any registered target name (``repro.targets.registry``,
 see ``list_targets()``) and is forwarded to every benchmark whose ``run``
-accepts one (currently ``dispatch_scaling`` and ``compiled_e2e``) — the
-per-figure benches are pinned to the paper's published SoCs.
+accepts one (``dispatch_scaling``, ``compiled_e2e``,
+``calibration_accuracy``) — the per-figure benches are pinned to the
+paper's published SoCs.  ``--list-targets`` prints every registered
+target (plugins included) and exits; ``--json`` additionally collects the
+emitted rows into one machine-readable summary (written to PATH, or
+printed as a final ``benchmarks JSON:`` line when no PATH is given).
 """
 
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 
 
@@ -25,7 +31,29 @@ def main() -> None:
         default="",
         help="registered target name for the target-generic benchmarks",
     )
+    ap.add_argument(
+        "--list-targets",
+        action="store_true",
+        help="print every registered target (plugins included) and exit",
+    )
+    ap.add_argument(
+        "--json",
+        nargs="?",
+        const="-",
+        default=None,
+        metavar="PATH",
+        help="collect results as JSON (to PATH, or stdout when bare)",
+    )
     args = ap.parse_args()
+
+    if args.list_targets:
+        from repro.targets import list_targets, target_info
+
+        for name in list_targets():
+            info = target_info(name)
+            aliases = f" (aliases: {', '.join(info['aliases'])})" if info["aliases"] else ""
+            print(f"{name:<12s} [{info['source']}]{aliases} {info['description']}")
+        return
 
     if args.target:
         from repro.targets import get_target
@@ -33,6 +61,8 @@ def main() -> None:
         get_target(args.target)  # fail fast on unknown names
 
     from . import (
+        calibration_accuracy,
+        common,
         compiled_e2e,
         dispatch_scaling,
         fig7_diana_micro,
@@ -54,11 +84,13 @@ def main() -> None:
         "fig11": fig11_resnet_mapping,
         "dispatch_scaling": dispatch_scaling,
         "compiled_e2e": compiled_e2e,
+        "calibration_accuracy": calibration_accuracy,
         "tpu_kernels": tpu_kernel_schedules,
         "pod_roofline": pod_roofline_summary,
     }
     only = {s.strip() for s in args.only.split(",") if s.strip()}
     print("name,us_per_call,derived")
+    results: dict[str, dict] = {}
     failures = 0
     for name, mod in benches.items():
         if only and name not in only:
@@ -66,11 +98,25 @@ def main() -> None:
         kwargs = {}
         if args.target and "target" in inspect.signature(mod.run).parameters:
             kwargs["target"] = args.target
+        common.drain_rows()
         try:
             mod.run(**kwargs)
+            results[name] = {"ok": True, "rows": common.drain_rows()}
         except Exception as e:  # keep the suite going, report at the end
             failures += 1
             print(f"{name},0.0,ERROR={type(e).__name__}:{e}", flush=True)
+            results[name] = {
+                "ok": False,
+                "error": f"{type(e).__name__}: {e}",
+                "rows": common.drain_rows(),
+            }
+    if args.json is not None:
+        payload = json.dumps({"target": args.target, "benches": results}, sort_keys=True)
+        if args.json == "-":
+            print(f"benchmarks JSON: {payload}", flush=True)
+        else:
+            with open(args.json, "w") as f:
+                f.write(payload)
     if failures:
         sys.exit(1)
 

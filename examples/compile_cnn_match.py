@@ -3,9 +3,14 @@ transformations, dispatch, backend lowering + static memory planning,
 bit-exact execution and per-module breakdown — plus the Fig. 9-style L1
 ablation on one network.
 
-  PYTHONPATH=src python examples/compile_cnn_match.py
+  PYTHONPATH=src python examples/compile_cnn_match.py [--json]
+
+``--json`` additionally prints the machine-readable deployment report
+(``CompiledModel.report_dict()``) — the same payload CI and the
+calibration fitter consume.
 """
 
+import json
 import sys
 from pathlib import Path
 
@@ -43,6 +48,8 @@ assert max_err == 0.0, f"compiled path diverged from the interpreter: {max_err}"
 out = compiled.run(params, x, timed=True)
 print("\ncompiled == interpreted:", {k: v.shape for k, v in out.items()}, f"(max |err| = {max_err})")
 print(compiled.report())
+if "--json" in sys.argv[1:]:
+    print(json.dumps(compiled.report_dict(), indent=2, sort_keys=True))
 
 # 4. L1 ablation (Fig. 9/10)
 print("\nGAP9 L1 scaling (MACs/cycle):")

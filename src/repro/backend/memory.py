@@ -103,6 +103,29 @@ class MemoryPlan:
                     return False
         return True
 
+    def to_dict(self) -> dict:
+        """JSON-safe summary (consumed by ``CompiledModel.report_dict``)."""
+        return {
+            "graph": self.graph_name,
+            "target": self.target_name,
+            "home_level": self.home_level,
+            "arena_bytes": dict(self.arena_bytes),
+            "capacities": dict(self.capacities),
+            "weight_bytes": self.weight_bytes,
+            "home_total_bytes": self.home_total_bytes,
+            "fits": self.fits,
+            "spills": list(self.spills),
+            "buffers": {
+                name: {
+                    "nbytes": b.nbytes,
+                    "offset": b.offset,
+                    "start": b.start,
+                    "end": b.end,
+                }
+                for name, b in sorted(self.buffers.items())
+            },
+        }
+
     def report(self) -> str:
         lines = [f"MemoryPlan[{self.graph_name} on {self.target_name}]"]
         for lvl in sorted(self.arena_bytes):
@@ -210,7 +233,9 @@ def plan_memory(
         lives[name] = (max(nb, 1), 0, 1)
     for i, seg in enumerate(segments):
         out = seg.output_node
-        lives[out.name] = (max(out.output_bytes(), 1), i, i + 1)
+        # edge_bytes (not output_bytes) so structural segment outputs
+        # (reshape, ...) are sized by the tensor flowing through them
+        lives[out.name] = (max(graph.edge_bytes(out.name), 1), i, i + 1)
     for i, seg in enumerate(segments):
         for src in seg.external_inputs(graph):
             if src in lives:

@@ -39,6 +39,24 @@ class SegmentTiming:
     route: str
     predicted_cycles: float
     measured_us: float
+    # the executing module's clock, so measured wall-clock converts into
+    # the cycle domain the cost model predicts in (repro.calibrate)
+    frequency_hz: float = 0.0
+
+    @property
+    def measured_cycles(self) -> float:
+        return self.measured_us * 1e-6 * self.frequency_hz
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "module": self.module,
+            "route": self.route,
+            "predicted_cycles": self.predicted_cycles,
+            "measured_us": self.measured_us,
+            "frequency_hz": self.frequency_hz,
+            "measured_cycles": self.measured_cycles,
+        }
 
 
 @dataclass
@@ -78,7 +96,14 @@ class CompiledModel:
                 out = jax.block_until_ready(ls.fn(seg_params, *xs))
                 us = (time.perf_counter() - t0) * 1e6
                 timings.append(
-                    SegmentTiming(ls.name, ls.module, ls.route, ls.segment.cycles, us)
+                    SegmentTiming(
+                        ls.name,
+                        ls.module,
+                        ls.route,
+                        ls.segment.cycles,
+                        us,
+                        frequency_hz=self.target.module(ls.module).frequency_hz,
+                    )
                 )
             else:
                 out = ls.fn(seg_params, *xs)
@@ -119,6 +144,49 @@ class CompiledModel:
         out: dict[str, int] = {}
         for ls in self.segments:
             out[ls.route] = out.get(ls.route, 0) + 1
+        return out
+
+    def report_dict(self) -> dict:
+        """Machine-readable companion of :meth:`report`: predicted cycles,
+        memory plan, and any measured timings in one JSON-safe payload —
+        what CI and the calibration fitter consume instead of parsing the
+        printed tables."""
+        g, t = self.graph, self.target
+        measured = {tm.name: tm for tm in self._last_timings}
+        segments = []
+        for ls in self.segments:
+            seg = ls.segment
+            cost = seg.schedule.cost if seg.schedule is not None else None
+            row = {
+                "name": ls.name,
+                "module": ls.module,
+                "route": ls.route,
+                "pattern": seg.pattern,
+                "nodes": [n.name for n in seg.nodes],
+                "predicted_cycles": seg.cycles,
+                "transfer_cycles": seg.transfer_cycles,
+                "l_ops": cost.l_ops if cost else 0.0,
+                "l_mem": cost.l_mem if cost else 0.0,
+            }
+            tm = measured.get(ls.name)
+            if tm is not None:
+                row["measured_us"] = tm.measured_us
+                row["measured_cycles"] = tm.measured_cycles
+            segments.append(row)
+        out = {
+            "graph": g.name,
+            "target": t.name,
+            "calibration": t.attrs.get("calibration"),
+            "segments": segments,
+            "routes": self.routes(),
+            "predicted_total_cycles": self.predicted_cycles(),
+            "predicted_latency_s": self.predicted_latency_s(),
+            "cycles_by_module": self.cycles_by_module(),
+            "memory_plan": self.memory_plan.to_dict(),
+        }
+        if measured:
+            out["measured_total_us"] = sum(tm.measured_us for tm in self._last_timings)
+            out["timings"] = [tm.to_dict() for tm in self._last_timings]
         return out
 
     def report(self) -> str:

@@ -1,0 +1,92 @@
+"""Calibration CLI: the measure -> fit -> profile walkthrough.
+
+  PYTHONPATH=src python -m repro.calibrate sweep --target gap9 --out samples.json
+  PYTHONPATH=src python -m repro.calibrate fit --samples samples.json --out profile.json
+  PYTHONPATH=src python -m repro.calibrate show profile.json
+
+Recompile with the fitted profile via
+``MATCH_CALIBRATION_PROFILE=profile.json`` or
+``get_target("gap9", profile="profile.json")``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _cmd_sweep(args) -> int:
+    from repro.calibrate import run_microbench, save_samples
+
+    samples = run_microbench(
+        args.target,
+        repeats=args.repeats,
+        budget=args.budget,
+        quick=args.quick,
+        verbose=True,
+    )
+    save_samples(args.out, samples, target=args.target, meta={"quick": args.quick})
+    mods = sorted({s.module for s in samples})
+    print(f"wrote {len(samples)} samples for modules {mods} -> {args.out}")
+    return 0
+
+
+def _cmd_fit(args) -> int:
+    from repro.calibrate import fit_profile, load_samples, profile_errors
+
+    target, samples = load_samples(args.samples)
+    target = args.target or target
+    if not target:
+        print("error: samples file carries no target name; pass --target", file=sys.stderr)
+        return 2
+    profile = fit_profile(samples, target_name=target, meta={"samples_file": args.samples})
+    profile.save(args.out)
+    errs = profile_errors(samples, profile)
+    print(
+        f"fitted {len(profile.modules)} modules from {errs['n']} samples: "
+        f"mean |pred-meas| {errs['mae_before']:.0f} -> {errs['mae_after']:.0f} "
+        f"cycles; profile {profile.tag()} -> {args.out}"
+    )
+    return 0
+
+
+def _cmd_show(args) -> int:
+    from repro.calibrate import load_profile
+
+    profile = load_profile(args.profile)
+    if profile is None:
+        return 1
+    print(json.dumps(profile.to_dict(), indent=2, sort_keys=True))
+    print(f"# fingerprint {profile.tag()}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.calibrate", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sw = sub.add_parser("sweep", help="run the microbenchmark sweep")
+    sw.add_argument("--target", required=True)
+    sw.add_argument("--out", default="calibration_samples.json")
+    sw.add_argument("--repeats", type=int, default=3)
+    sw.add_argument("--budget", type=int, default=300)
+    sw.add_argument("--quick", action="store_true", help="tiny sweep (CI smoke)")
+    sw.set_defaults(fn=_cmd_sweep)
+
+    ft = sub.add_parser("fit", help="fit a profile from sweep samples")
+    ft.add_argument("--samples", required=True)
+    ft.add_argument("--target", default="", help="override the samples' target name")
+    ft.add_argument("--out", default="calibration_profile.json")
+    ft.set_defaults(fn=_cmd_fit)
+
+    sh = sub.add_parser("show", help="print a profile (validating it)")
+    sh.add_argument("profile")
+    sh.set_defaults(fn=_cmd_show)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -57,6 +57,18 @@ class CostBreakdown:
             return 0.0
         return total_macs / self.latency_cycles
 
+    def features(self) -> dict[str, float]:
+        """Linear features of this breakdown, for the calibration fitter.
+
+        Predicted latency is affine in these: ``a*l_ops + b*l_mem + c``
+        for synchronous-DMA modules, ``a*max(l_ops, l_mem) + c`` for
+        async double-buffered ones.  The ``repro.calibrate`` fitter
+        regresses measured cycles against them and writes the solved
+        (a, b, c) back into the hardware model via
+        ``ExecutionModule.recalibrated``.
+        """
+        return {"l_ops": self.l_ops, "l_mem": self.l_mem}
+
 
 INFEASIBLE = CostBreakdown(
     feasible=False,
@@ -224,7 +236,7 @@ def _l_ops(
 ) -> tuple[float, float]:
     cm = module.compute
     if cm.custom is not None:
-        per_tile = cm.custom(workload, tiles, module)
+        per_tile = cm.custom_scale * cm.custom(workload, tiles, module)
         n_tiles = prod(outer_iters.values())
         su = module.spatial_for(workload)
         return per_tile * n_tiles + cm.fixed_setup_cycles, su.utilization(tiles)
@@ -331,4 +343,7 @@ def evaluate_mapping(
         latency = max(l_ops, l_mem)
     else:
         latency = l_ops + l_mem
+    # post-combine fixed overhead (job launch / runtime call), charged once
+    # per workload execution — the calibration fitter's constant term
+    latency += module.compute.fixed_overhead_cycles
     return CostBreakdown(True, latency, l_ops, l_mem, traffic, chunks, util)

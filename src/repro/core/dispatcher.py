@@ -462,6 +462,12 @@ def _dispatch_greedy(
 # ---------------------------------------------------------------------------
 
 
+# "no profile argument given" (mirrors repro.targets.registry): the
+# MATCH_CALIBRATION_PROFILE env default may apply; ``profile=None``
+# explicitly forces the declared (uncalibrated) model.
+_PROFILE_UNSET = object()
+
+
 def dispatch(
     graph: Graph,
     target: MatchTarget | str,
@@ -471,6 +477,7 @@ def dispatch(
     beam: int = 12,
     planner: SchedulePlanner | None = None,
     cache_path=None,
+    profile=_PROFILE_UNSET,
     verbose: bool = False,
 ) -> MappedGraph:
     """Partition ``graph`` across ``target``'s execution modules.
@@ -482,14 +489,40 @@ def dispatch(
     ``policy="greedy"`` keeps the legacy largest-match walk as a baseline.
     ``planner`` / ``cache_path`` control schedule batching and the
     persistent DSE cache (see :class:`~repro.core.loma.SchedulePlanner`).
+    ``profile`` applies a :class:`~repro.calibrate.CalibrationProfile`
+    (or a path to one) on top of the declared target, so the DSE ranks
+    candidates with measured — not assumed — hardware constants; for
+    target *names* it follows ``get_target`` semantics (omitted = the
+    ``MATCH_CALIBRATION_PROFILE`` env default, ``None`` = explicitly
+    uncalibrated), while a :class:`MatchTarget` *instance* is taken
+    as-is unless a profile is explicitly passed (the env default never
+    mutates an instance the caller built).  A profile fitted for a
+    different target is rejected with :class:`ValueError` on both paths.
     """
     if isinstance(target, str):
         # late import: repro.targets depends on repro.core, not vice versa
         # (and an explicit MatchTarget instance must keep working even if
         # the targets package cannot import)
-        from repro.targets.registry import resolve_target
+        from repro.targets.registry import get_target
 
-        target = resolve_target(target)
+        if profile is _PROFILE_UNSET:
+            target = get_target(target)
+        else:
+            target = get_target(target, profile=profile)
+    elif profile is not _PROFILE_UNSET and profile is not None:
+        from repro.calibrate.profile import (
+            apply_profile,
+            coerce_profile,
+            profile_matches_target,
+        )
+
+        prof = coerce_profile(profile)
+        if prof is not None and not profile_matches_target(prof, target.name):
+            raise ValueError(
+                f"calibration profile is for target {prof.target!r}, "
+                f"not {target.name!r}"
+            )
+        target = apply_profile(target, prof)
     if policy == "greedy":
         if planner is not None or cache_path is not None:
             raise ValueError(

@@ -12,7 +12,14 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Callable, Iterable, Mapping, Sequence
 
-__all__ = ["Node", "Graph", "GraphTransform", "apply_transforms"]
+__all__ = ["Node", "Graph", "GraphTransform", "apply_transforms", "PASSTHROUGH_OPS"]
+
+# Structural ops whose output is (a view of) their first input: element
+# count AND element width are preserved, so a transfer edge out of them
+# is as big as the tensor flowing *through* them.  (A width-changing
+# ``cast`` deliberately does not qualify: pricing it with the producer's
+# elem_bytes would mis-size the edge.)
+PASSTHROUGH_OPS = ("reshape", "flatten", "squeeze", "expand_dims", "identity")
 
 
 @dataclass(frozen=True)
@@ -42,13 +49,22 @@ class Node:
         return replace(self, attrs=a)
 
     # -- output tensor sizing (used to size cross-module transfers) -----
+    def has_geometry(self) -> bool:
+        """True when the node carries tensor-shape attrs (K/C/OY/OX).
+
+        Structural ops (reshape, ...) usually don't; their real output
+        size is their producer's, which ``Graph.edge_bytes`` resolves by
+        walking the passthrough chain."""
+        return any(self.attr(k) for k in ("K", "C", "OY", "OX"))
+
     def output_elems(self) -> int:
         """Elements of this node's output tensor, from geometry attrs.
 
         Convs/denses produce B x K x OY x OX; depthwise convs, pools and
-        elementwise ops keep the channel count C; nodes without geometry
-        (structural ops) report 1 element so they never dominate a
-        transfer estimate.
+        elementwise ops keep the channel count C.  A node without geometry
+        reports 1 element — callers that know the graph should size such
+        edges via ``Graph.edge_bytes``, which propagates the producing
+        tensor's true size through structural passthrough chains.
         """
         b = int(self.attr("B", 1) or 1)
         ch = int(self.attr("K", 0) or 0)
@@ -87,9 +103,21 @@ class Graph:
     def edge_bytes(self, producer: str) -> int:
         """Bytes flowing along the edge out of the ``producer`` node,
         sized from its geometry attrs.  Graph inputs return 0: they start
-        in the shared home memory, so no cross-module transfer is due."""
-        if self.has(producer):
-            return self.node(producer).output_bytes()
+        in the shared home memory, so no cross-module transfer is due.
+
+        Structural passthrough ops (reshape, ...) carry no geometry of
+        their own, yet the full producing tensor still flows through them
+        — so the chain is walked back to the nearest node that *does*
+        declare geometry (pricing such edges at 1 element would let the
+        DP move real tensors across modules for free)."""
+        cur = producer
+        seen: set[str] = set()
+        while self.has(cur) and cur not in seen:
+            seen.add(cur)
+            n = self.node(cur)
+            if n.has_geometry() or n.op not in PASSTHROUGH_OPS or not n.inputs:
+                return n.output_bytes()
+            cur = n.inputs[0]
         return 0
 
     def single_consumer(self, name: str) -> Node | None:

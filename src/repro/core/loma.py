@@ -309,11 +309,22 @@ def _workload_key(workload: Workload, module: ExecutionModule) -> tuple:
             for m in module.memories
         ),
         tuple(sorted(su.dims.items())),
-        (cm.cycles_per_iter, cm.output_elem_overhead, cm.macs_per_pe_cycle, cm.fixed_setup_cycles),
+        (
+            cm.cycles_per_iter,
+            cm.output_elem_overhead,
+            cm.macs_per_pe_cycle,
+            cm.fixed_setup_cycles,
+            cm.fixed_overhead_cycles,
+            cm.custom_scale,
+        ),
         _callable_token(cm.custom),
         _callable_token(module.constraint),
         module.async_dma,
         module.double_buffer,
+        # calibration-profile tag (fingerprint:version) stamped by
+        # ExecutionModule.recalibrated — calibrated and declared instances
+        # of the same module must never share schedule-cache entries
+        str(module.attrs.get("calibration", "")),
     )
 
 
@@ -562,7 +573,8 @@ class SchedulePlanner:
 
     # Bump when evaluate_mapping / the traffic model / the search change
     # semantically: persisted entries from older cost models must miss.
-    CACHE_VERSION = 1
+    # v2: post-combine fixed_overhead_cycles + calibration tags in the key.
+    CACHE_VERSION = 2
 
     def _load_disk_cache(self) -> dict[str, ScheduleResult]:
         """Read the persisted cache; any defect warns and falls back to a

@@ -95,15 +95,23 @@ class ComputeModel:
     ``output_elem_overhead``: extra cycles per *output element wave*
     (DIANA: 23 cycles elementwise + store).
     ``macs_per_pe_cycle``: MACs one PE retires per cycle (SIMD width).
+    ``fixed_overhead_cycles``: cycles charged once per workload execution
+    *after* the L_ops/L_mem combine (job launch, runtime call overhead) —
+    the knob ``repro.calibrate`` fits from measured timings.
     ``custom``: optional full override ``f(workload, tiles, module)->cycles``
-    for modules whose published cost model is not PE-array shaped (NE16).
+    for modules whose published cost model is not PE-array shaped (NE16);
+    ``custom_scale`` multiplies its result so calibration can rescale
+    opaque models without wrapping the callable (which would defeat the
+    schedule-cache keying of ``repro.core.loma``).
     """
 
     cycles_per_iter: float = 1.0
     output_elem_overhead: float = 0.0
     macs_per_pe_cycle: float = 1.0
     fixed_setup_cycles: float = 0.0
+    fixed_overhead_cycles: float = 0.0
     custom: Callable[[Workload, Mapping[str, int], "ExecutionModule"], float] | None = None
+    custom_scale: float = 1.0
 
 
 @dataclass(frozen=True)
@@ -169,6 +177,60 @@ class ExecutionModule:
             su = self.spatial.get("*", SpatialUnrolling(dims={}))
         return su
 
+    def recalibrated(
+        self,
+        *,
+        compute_scale: float = 1.0,
+        mem_scale: float = 1.0,
+        fixed_overhead_cycles: float = 0.0,
+        tag: str = "",
+    ) -> "ExecutionModule":
+        """Parameter-override hook for profiling-guided calibration.
+
+        Returns a copy whose declared constants are rescaled so that, for
+        any temporal mapping, the predicted breakdown becomes
+        ``compute_scale * L_ops``, ``mem_scale * L_mem`` and an extra
+        ``fixed_overhead_cycles`` charged after the L_ops/L_mem combine.
+        The declared hardware file is never edited; ``tag`` (typically a
+        profile fingerprint) lands in ``attrs["calibration"]`` and keys
+        the persistent schedule cache (see ``repro.core.loma``).
+        """
+        import dataclasses
+
+        if compute_scale <= 0 or mem_scale <= 0:
+            raise ValueError(
+                f"calibration scales must be positive, got compute={compute_scale} mem={mem_scale}"
+            )
+        if not math.isfinite(fixed_overhead_cycles) or fixed_overhead_cycles < 0:
+            raise ValueError(
+                f"fixed_overhead_cycles must be finite and >= 0, got {fixed_overhead_cycles}"
+            )
+        cm = self.compute
+        new_cm = dataclasses.replace(
+            cm,
+            cycles_per_iter=cm.cycles_per_iter * compute_scale,
+            output_elem_overhead=cm.output_elem_overhead * compute_scale,
+            fixed_setup_cycles=cm.fixed_setup_cycles * compute_scale,
+            fixed_overhead_cycles=cm.fixed_overhead_cycles + fixed_overhead_cycles,
+            custom_scale=cm.custom_scale * compute_scale,
+        )
+        mems = tuple(
+            dataclasses.replace(
+                m,
+                bandwidth=m.bandwidth / mem_scale,
+                chunk_overhead=m.chunk_overhead * mem_scale,
+            )
+            for m in self.memories
+        )
+        new = dataclasses.replace(self)
+        new.compute = new_cm
+        new.memories = mems
+        new.patterns = list(self.patterns)
+        new.attrs = dict(self.attrs)
+        if tag:
+            new.attrs["calibration"] = tag
+        return new
+
 
 @dataclass
 class MatchTarget:
@@ -204,6 +266,46 @@ class MatchTarget:
             interconnect=self.interconnect,
             attrs=dict(self.attrs),
         )
+
+    def recalibrated(
+        self, overrides: Mapping[str, object], tag: str = ""
+    ) -> "MatchTarget":
+        """Target with per-module calibration overrides applied.
+
+        ``overrides`` maps module names to objects (mappings or anything
+        with attribute access, e.g. ``repro.calibrate.ModuleCalibration``)
+        carrying ``compute_scale`` / ``mem_scale`` / ``fixed_overhead_cycles``.
+        Modules without an override are kept as declared.  The target name
+        is preserved so registry / lowering consistency checks keep
+        holding for calibrated instances.
+        """
+
+        def val(ov, key: str, default: float) -> float:
+            if isinstance(ov, Mapping):
+                return float(ov.get(key, default))
+            return float(getattr(ov, key, default))
+
+        def apply(m: ExecutionModule) -> ExecutionModule:
+            ov = overrides.get(m.name)
+            if ov is None:
+                return m
+            return m.recalibrated(
+                compute_scale=val(ov, "compute_scale", 1.0),
+                mem_scale=val(ov, "mem_scale", 1.0),
+                fixed_overhead_cycles=val(ov, "fixed_overhead_cycles", 0.0),
+                tag=tag,
+            )
+
+        new = MatchTarget(
+            name=self.name,
+            modules=[apply(m) for m in self.modules],
+            fallback=apply(self.fallback),
+            interconnect=self.interconnect,
+            attrs=dict(self.attrs),
+        )
+        if tag:
+            new.attrs["calibration"] = tag
+        return new
 
     def scaled_l1(self, l1_bytes: int) -> "MatchTarget":
         """Target with every module's L1 resized (paper Fig. 9/10 ablation)."""

@@ -19,6 +19,15 @@ Out-of-tree targets plug in two ways, both without touching this repo:
 * **entry points** — distributions may advertise factories under the
   ``match_repro.targets`` group (``importlib.metadata`` entry points);
   each entry point is registered under its advertised name.
+
+Calibration: :func:`get_target` accepts ``profile=`` (a
+``repro.calibrate.CalibrationProfile``, a path to one, or a raw mapping)
+and overlays the fitted parameter overrides on the declared target.
+When no explicit profile is passed, the ``MATCH_CALIBRATION_PROFILE``
+environment variable supplies a default profile file; an env profile
+that is corrupt, stale, or fitted for a *different* target warns (or is
+skipped) and the declared model is used — calibration must never break
+a compile.
 """
 
 from __future__ import annotations
@@ -157,12 +166,70 @@ def _canonical(name: str) -> str:
     return _ALIASES.get(name, name)
 
 
-def get_target(name: str, **factory_kwargs) -> MatchTarget:
+# "no profile argument given": distinct from profile=None (explicitly
+# uncalibrated), which also suppresses the MATCH_CALIBRATION_PROFILE env
+# default.
+_PROFILE_UNSET = object()
+
+
+# kept in sync with repro.calibrate.profile.PROFILE_ENV — spelled out
+# here so the common no-calibration path never imports repro.calibrate
+_PROFILE_ENV = "MATCH_CALIBRATION_PROFILE"
+
+
+def _calibrated(target: MatchTarget, profile) -> MatchTarget:
+    """Overlay a calibration profile on a freshly built target.
+
+    ``profile is _PROFILE_UNSET`` consults ``MATCH_CALIBRATION_PROFILE``;
+    an env-sourced profile fitted for a different target is skipped
+    silently (one env var serves multi-target runs like the conformance
+    matrix), while an *explicitly passed* mismatched profile raises.
+    """
+    from_env = profile is _PROFILE_UNSET
+    if from_env:
+        path = os.environ.get(_PROFILE_ENV)
+        if not path:
+            return target
+        profile = path
+    if profile is None:
+        return target
+    try:
+        from repro.calibrate.profile import (
+            apply_profile,
+            coerce_profile,
+            profile_matches_target,
+        )
+    except Exception as e:  # env-requested calibration must never break compiles
+        if from_env:
+            warnings.warn(
+                f"{_PROFILE_ENV} is set but repro.calibrate failed to import "
+                f"({e}); using the declared hardware model"
+            )
+            return target
+        raise
+    prof = coerce_profile(profile)  # warns + None on corrupt/stale files
+    if prof is None:
+        return target
+    if not profile_matches_target(prof, target.name):
+        if from_env:
+            return target
+        raise ValueError(
+            f"calibration profile is for target {prof.target!r}, not {target.name!r}"
+        )
+    return apply_profile(target, prof)
+
+
+def get_target(name: str, *, profile=_PROFILE_UNSET, **factory_kwargs) -> MatchTarget:
     """Instantiate the registered target ``name`` (aliases resolve).
 
     Unknown names first trigger plugin loading (``MATCH_TARGET_PLUGINS``
     + entry points) so an out-of-tree target resolves lazily, then raise
     :class:`TargetRegistryError` listing everything that *is* registered.
+
+    ``profile`` overlays fitted calibration overrides (see
+    :mod:`repro.calibrate`): a ``CalibrationProfile``, a path, or a raw
+    mapping.  Omitted, the ``MATCH_CALIBRATION_PROFILE`` env var is
+    consulted; ``profile=None`` forces the declared (uncalibrated) model.
     """
     with _LOCK:
         key = _canonical(name)
@@ -181,7 +248,7 @@ def get_target(name: str, **factory_kwargs) -> MatchTarget:
         raise TargetRegistryError(
             f"factory for {name!r} returned {type(target).__name__}, not MatchTarget"
         )
-    return target
+    return _calibrated(target, profile)
 
 
 def resolve_target(target: "MatchTarget | str") -> MatchTarget:

@@ -62,7 +62,10 @@ def _tiny_dispatch(planner):
         ("[]", "unrecognized"),
         ('{"k": "flat-legacy-entry"}', "unrecognized"),
         ('{"version": 0, "entries": {}}', "stale version"),
-        ('{"version": 1, "entries": []}', "not a mapping"),
+        (
+            '{"version": %d, "entries": []}' % SchedulePlanner.CACHE_VERSION,
+            "not a mapping",
+        ),
     ],
 )
 def test_bad_cache_files_warn_and_fall_back(tmp_path, payload, why):

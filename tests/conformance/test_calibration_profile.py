@@ -1,0 +1,98 @@
+"""Calibration conformance: every registered target must compile
+identically-correct code with and without a CalibrationProfile applied —
+bit-exact execution, valid memory plans, and warm == cold schedule-cache
+roundtrips keyed by the profile fingerprint."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.backend import lower
+from repro.calibrate import CalibrationProfile, ModuleCalibration, apply_profile, graph_io
+from repro.cnn import conv_block_graph
+from repro.core import SchedulePlanner, clear_schedule_cache, dispatch
+from repro.targets import get_target
+
+from .harness import BUDGET, TARGETS
+
+
+@pytest.fixture(autouse=True)
+def _no_calibration_env(monkeypatch):
+    monkeypatch.delenv("MATCH_CALIBRATION_PROFILE", raising=False)
+    monkeypatch.delenv("MATCH_SCHEDULE_CACHE", raising=False)
+
+
+def _profile_for(tname: str) -> CalibrationProfile:
+    tgt = get_target(tname, profile=None)
+    return CalibrationProfile(
+        target=tgt.name,
+        modules={
+            m.name: ModuleCalibration(
+                compute_scale=1.7, mem_scale=1.3, fixed_overhead_cycles=64.0, samples=1
+            )
+            for m in tgt.all_modules()
+        },
+    )
+
+
+
+
+
+@pytest.mark.parametrize("tname", TARGETS)
+def test_calibrated_pipeline_stays_bit_exact(tname):
+    """A profile rescales cost constants only: the compiled pipeline must
+    stay bit-exact vs the interpreter and keep a fitting memory plan,
+    while predicted cycles move (the DSE consumed the new constants)."""
+    g = conv_block_graph(IX=8, IY=8, C=8, K=8)
+    prof = _profile_for(tname)
+    plain = dispatch(g, get_target(tname, profile=None), budget=BUDGET)
+    cal = dispatch(g, get_target(tname, profile=prof), budget=BUDGET)
+    assert cal.target.attrs["calibration"]["fingerprint"] == prof.fingerprint()
+    assert cal.total_cycles() != pytest.approx(plain.total_cycles())
+
+    compiled = lower(cal)
+    params, x = graph_io(g)
+    assert compiled.verify(params, x) == 0.0
+    assert compiled.memory_plan.fits
+    assert compiled.report_dict()["calibration"]["fingerprint"] == prof.fingerprint()
+
+
+@pytest.mark.parametrize("tname", TARGETS)
+def test_calibrated_cache_roundtrip_warm_equals_cold(tname, tmp_path):
+    """Schedule-cache entries are keyed by the profile: a warm calibrated
+    dispatch reproduces the cold one with zero searches, and never serves
+    entries fitted under a different (or no) profile."""
+    g = conv_block_graph(IX=8, IY=8, C=8, K=8)
+    prof = _profile_for(tname)
+    cache = tmp_path / f"{tname}.json"
+
+    clear_schedule_cache()
+    plain = SchedulePlanner(cache_path=cache)
+    dispatch(g, get_target(tname, profile=None), planner=plain, budget=BUDGET)
+    assert plain.stats["searched"] > 0
+
+    clear_schedule_cache()
+    cold = SchedulePlanner(cache_path=cache)
+    mg_cold = dispatch(g, get_target(tname, profile=prof), planner=cold, budget=BUDGET)
+    assert cold.stats["searched"] > 0  # distinct keys: plain entries unusable
+
+    clear_schedule_cache()
+    warm = SchedulePlanner(cache_path=cache)
+    mg_warm = dispatch(g, get_target(tname, profile=prof), planner=warm, budget=BUDGET)
+    assert warm.stats["searched"] == 0
+    assert warm.stats["disk_hits"] > 0
+    assert mg_warm.total_cycles() == pytest.approx(mg_cold.total_cycles())
+    assert [s.module for s in mg_warm.segments] == [s.module for s in mg_cold.segments]
+
+
+@pytest.mark.parametrize("tname", TARGETS)
+def test_profile_applies_to_restricted_ablations(tname):
+    """Profiles survive the paper's Table IV ablation hook: restricting a
+    calibrated target keeps the overridden constants on the kept modules."""
+    prof = _profile_for(tname)
+    tgt = apply_profile(get_target(tname, profile=None), prof)
+    cpu_only = tgt.restricted([])
+    g = conv_block_graph(IX=8, IY=8, C=8, K=8)
+    mg = dispatch(g, cpu_only, budget=BUDGET)
+    assert {s.module for s in mg.segments} == {tgt.fallback.name}
+    assert mg.total_cycles() > 0

@@ -1,0 +1,157 @@
+"""Property tests for the analytical cost model's calibration contract:
+``evaluate_mapping`` must be monotone in the hardware constants the
+fitter rescales (more macs/cycle never increases predicted cycles; lower
+bandwidth never decreases them), and ``tile_working_set`` must be
+monotone in tile sizes, double under double-buffering, and reject
+unserved operands.  Hypothesis when installed; a seeded sweep otherwise
+(the container image does not ship hypothesis)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ComputeModel,
+    ExecutionModule,
+    MemoryLevel,
+    SpatialUnrolling,
+    evaluate_mapping,
+    tile_working_set,
+)
+from repro.core.loma import divisors
+from repro.core.workload import conv2d_workload
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+
+def _module(
+    *,
+    macs_per_pe_cycle: float = 1.0,
+    bandwidth: float = 8.0,
+    async_dma: bool = False,
+    double_buffer: bool = False,
+    l1_bytes: int = 1 << 20,
+    serves: tuple = ("*",),
+) -> ExecutionModule:
+    return ExecutionModule(
+        name="m",
+        memories=(
+            MemoryLevel("L1", l1_bytes, bandwidth, serves=serves),
+            MemoryLevel("L2", 1 << 24, bandwidth),
+        ),
+        spatial={"conv2d": SpatialUnrolling({"K": 4, "OX": 4})},
+        compute=ComputeModel(
+            cycles_per_iter=2.0,
+            output_elem_overhead=0.5,
+            macs_per_pe_cycle=macs_per_pe_cycle,
+        ),
+        async_dma=async_dma,
+        double_buffer=double_buffer,
+        supported_ops=("conv2d",),
+    )
+
+
+def _workload_and_tiles(rng: np.random.Generator):
+    K = int(rng.choice([8, 16, 32]))
+    C = int(rng.choice([4, 8, 16]))
+    OY = int(rng.choice([8, 16]))
+    OX = int(rng.choice([8, 16]))
+    FY = FX = int(rng.choice([1, 3]))
+    wl = conv2d_workload(name="p", K=K, C=C, OY=OY, OX=OX, FY=FY, FX=FX)
+    tiles = {
+        d: int(rng.choice(divisors(s))) for d, s in wl.dim_sizes.items()
+    }
+    return wl, tiles
+
+
+def _check_param_monotonicity(seed_or_vals) -> None:
+    rng = np.random.default_rng(seed_or_vals)
+    wl, tiles = _workload_and_tiles(rng)
+    order = wl.dim_names
+    scale = float(rng.uniform(1.5, 16.0))
+    for async_dma in (False, True):
+        base_mod = _module(async_dma=async_dma, double_buffer=async_dma)
+        base = evaluate_mapping(wl, tiles, order, base_mod)
+        if not base.feasible:
+            continue
+        # more macs/cycle never increases predicted cycles
+        faster = _module(
+            macs_per_pe_cycle=scale, async_dma=async_dma, double_buffer=async_dma
+        )
+        up = evaluate_mapping(wl, tiles, order, faster)
+        assert up.latency_cycles <= base.latency_cycles + 1e-9
+        assert up.l_ops <= base.l_ops + 1e-9
+        # lower bandwidth never decreases them
+        slower = _module(
+            bandwidth=8.0 / scale, async_dma=async_dma, double_buffer=async_dma
+        )
+        down = evaluate_mapping(wl, tiles, order, slower)
+        assert down.latency_cycles >= base.latency_cycles - 1e-9
+        assert down.l_mem >= base.l_mem - 1e-9
+        # and the recalibration hook composes the same way: scaling both
+        # axes up can only increase the predicted latency
+        worse = base_mod.recalibrated(
+            compute_scale=scale, mem_scale=scale, fixed_overhead_cycles=10.0
+        )
+        w = evaluate_mapping(wl, tiles, order, worse)
+        assert w.latency_cycles >= base.latency_cycles - 1e-9
+
+
+def _check_working_set(seed_or_vals) -> None:
+    rng = np.random.default_rng(seed_or_vals)
+    wl, tiles = _workload_and_tiles(rng)
+    single = _module()
+    double = _module(double_buffer=True)
+    usage = tile_working_set(wl, tiles, single)
+    assert all(v >= 0 for v in usage.values())
+    # componentwise-larger tiles never shrink any level's working set
+    grown = {
+        d: int(rng.choice([x for x in divisors(wl.dim_sizes[d]) if x >= t]))
+        for d, t in tiles.items()
+    }
+    bigger = tile_working_set(wl, grown, single)
+    for lvl in usage:
+        assert bigger[lvl] >= usage[lvl]
+    # double-buffering charges exactly 2x (revolving windows per operand)
+    assert tile_working_set(wl, tiles, double) == {
+        lvl: 2 * v for lvl, v in usage.items()
+    }
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_cost_model_param_monotonicity_seeded(seed):
+    _check_param_monotonicity(seed)
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_tile_working_set_properties_seeded(seed):
+    _check_working_set(seed)
+
+
+def test_tile_working_set_rejects_unserved_operands():
+    wl = conv2d_workload(name="p", K=8, C=8, OY=8, OX=8, FY=3, FX=3)
+    mod = _module(serves=("I", "O"))  # weights have no L1 home
+    with pytest.raises(KeyError, match="W"):
+        tile_working_set(wl, {d: 1 for d in wl.dim_names}, mod)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_cost_model_param_monotonicity_hypothesis(seed):
+        _check_param_monotonicity(seed)
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_tile_working_set_properties_hypothesis(seed):
+        _check_working_set(seed)

@@ -1,0 +1,511 @@
+"""Tests for repro.calibrate — the measure -> fit -> re-rank loop (PR 4),
+plus the satellite fixes that ride along (structural edge sizing,
+machine-readable reports)."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.backend import lower
+from repro.calibrate import (
+    CalibrationProfile,
+    CalibrationProfileWarning,
+    MicrobenchSample,
+    ModuleCalibration,
+    apply_profile,
+    collect_samples,
+    dense_block_graph,
+    graph_io,
+    fit_module,
+    fit_profile,
+    load_profile,
+    profile_errors,
+    run_microbench,
+)
+from repro.cnn import conv_block_graph
+from repro.core import (
+    ComputeModel,
+    ExecutionModule,
+    Graph,
+    MemoryLevel,
+    Node,
+    SchedulePlanner,
+    SpatialUnrolling,
+    clear_schedule_cache,
+    dispatch,
+    evaluate_mapping,
+)
+from repro.core.workload import conv2d_workload
+from repro.targets import get_target
+
+BUDGET = 300
+
+
+@pytest.fixture(autouse=True)
+def _no_calibration_env(monkeypatch):
+    monkeypatch.delenv("MATCH_CALIBRATION_PROFILE", raising=False)
+    monkeypatch.delenv("MATCH_SCHEDULE_CACHE", raising=False)
+
+
+def _module(*, async_dma=False, fixed_overhead=0.0, l1=1 << 16) -> ExecutionModule:
+    return ExecutionModule(
+        name="m",
+        memories=(MemoryLevel("L1", l1, 8.0), MemoryLevel("L2", 1 << 22, 8.0)),
+        spatial={"*": SpatialUnrolling({})},
+        compute=ComputeModel(fixed_overhead_cycles=fixed_overhead),
+        async_dma=async_dma,
+        double_buffer=async_dma,
+        supported_ops=("conv2d",),
+    )
+
+
+def _wl():
+    return conv2d_workload(name="wl", K=8, C=8, OY=8, OX=8, FY=3, FX=3)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: structural edge sizing (Node.output_elems / Graph.edge_bytes)
+# ---------------------------------------------------------------------------
+
+
+def _reshape_graph() -> Graph:
+    geom = {"B": 1, "K": 16, "C": 8, "OY": 8, "OX": 8, "FY": 1, "FX": 1, "elem_bytes": 1}
+    nodes = [
+        Node("conv", "conv2d", ("x",), dict(geom)),
+        Node("flat", "reshape", ("conv",), {"elem_bytes": 1}),
+        Node("fc", "dense", ("flat",), {"B": 1, "K": 4, "C": 1024, "elem_bytes": 1}),
+    ]
+    return Graph("reshape_net", nodes, {"x": (1, 8, 8, 8)}, ("fc",))
+
+
+def test_edge_bytes_propagates_through_structural_ops():
+    """Regression: a reshape edge must carry its producer's tensor size,
+    not 1 element — otherwise the DP prices module switches through it
+    at ~zero and happily splits segments across the interconnect."""
+    g = _reshape_graph()
+    conv_bytes = g.node("conv").output_bytes()
+    assert conv_bytes == 16 * 8 * 8
+    assert g.edge_bytes("flat") == conv_bytes
+    # the conv's own edge is unchanged, and a graph input still prices 0
+    assert g.edge_bytes("conv") == conv_bytes
+    assert g.edge_bytes("x") == 0
+
+
+def test_edge_bytes_structural_chain_and_input_passthrough():
+    nodes = [
+        Node("r1", "reshape", ("x",), {"elem_bytes": 1}),
+        Node("conv", "conv2d", ("r1",), {"B": 1, "K": 4, "C": 1, "OY": 4, "OX": 4, "elem_bytes": 1}),
+        Node("r2", "reshape", ("conv",), {}),
+        Node("r3", "reshape", ("r2",), {}),
+    ]
+    g = Graph("chain", nodes, {"x": (1, 4, 4, 1)}, ("r3",))
+    # chain of reshapes resolves to the conv; reshape of a graph input -> 0
+    assert g.edge_bytes("r3") == g.node("conv").output_bytes() == 4 * 4 * 4
+    assert g.edge_bytes("r1") == 0
+    # non-passthrough op without geometry keeps the old 1-element floor
+    g2 = Graph("sm", [Node("s", "softmax", ("x",), {"elem_bytes": 4})], {"x": (4,)}, ("s",))
+    assert g2.edge_bytes("s") == 4
+
+
+def test_memory_plan_sizes_structural_segments_by_edge_bytes():
+    """Same defect class in the planner: a reshape segment's home buffer
+    must hold the tensor flowing through it, not 1 byte."""
+    g = _reshape_graph()
+    compiled = lower(dispatch(g, "gap9", budget=BUDGET))
+    flat = compiled.memory_plan.buffers.get("flat")
+    if flat is not None:  # only materialized when 'flat' ends a segment
+        assert flat.nbytes == g.node("conv").output_bytes()
+    params, x = graph_io(g)
+    assert compiled.verify(params, x) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Cost-model hooks: features, fixed overhead, recalibrated scaling
+# ---------------------------------------------------------------------------
+
+
+def test_features_are_the_linear_decomposition():
+    wl = _wl()
+    tiles = {d: 1 for d in wl.dim_names}
+    cost = evaluate_mapping(wl, tiles, wl.dim_names, _module())
+    f = cost.features()
+    assert f == {"l_ops": cost.l_ops, "l_mem": cost.l_mem}
+    assert cost.latency_cycles == pytest.approx(cost.l_ops + cost.l_mem)
+
+
+def test_fixed_overhead_is_charged_after_the_combine():
+    wl = _wl()
+    tiles = {d: 1 for d in wl.dim_names}
+    for async_dma in (False, True):
+        base = evaluate_mapping(wl, tiles, wl.dim_names, _module(async_dma=async_dma))
+        bumped = evaluate_mapping(
+            wl, tiles, wl.dim_names, _module(async_dma=async_dma, fixed_overhead=1234.0)
+        )
+        assert bumped.latency_cycles == pytest.approx(base.latency_cycles + 1234.0)
+        assert bumped.l_ops == pytest.approx(base.l_ops)
+        assert bumped.l_mem == pytest.approx(base.l_mem)
+
+
+@pytest.mark.parametrize("async_dma", [False, True])
+def test_recalibrated_module_reproduces_the_linear_model(async_dma):
+    """evaluate_mapping on a recalibrated module must equal the fitter's
+    linear model a*L_ops + b*L_mem + c (sum) / max(a*L_ops, b*L_mem) + c."""
+    wl = _wl()
+    tiles = {d: 1 for d in wl.dim_names}
+    mod = _module(async_dma=async_dma)
+    base = evaluate_mapping(wl, tiles, wl.dim_names, mod)
+    a, b, c = 2.5, 4.0, 777.0
+    calibrated = mod.recalibrated(
+        compute_scale=a, mem_scale=b, fixed_overhead_cycles=c, tag="test"
+    )
+    got = evaluate_mapping(wl, tiles, wl.dim_names, calibrated)
+    if async_dma:
+        want = max(a * base.l_ops, b * base.l_mem) + c
+    else:
+        want = a * base.l_ops + b * base.l_mem + c
+    assert got.latency_cycles == pytest.approx(want, rel=1e-9)
+    assert calibrated.attrs["calibration"] == "test"
+    # ModuleCalibration.predict_cycles agrees with the cost model
+    mc = ModuleCalibration(compute_scale=a, mem_scale=b, fixed_overhead_cycles=c)
+    assert mc.predict_cycles(base.l_ops, base.l_mem, async_dma) == pytest.approx(
+        got.latency_cycles
+    )
+
+
+def test_recalibrated_rejects_nonpositive_scales():
+    with pytest.raises(ValueError):
+        _module().recalibrated(compute_scale=0.0)
+    with pytest.raises(ValueError):
+        _module().recalibrated(mem_scale=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# Fitter
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_samples(a, b, c, *, async_dma, n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    freq = 1e6  # measured_us * 1e-6 * 1e6 == measured "cycles"
+    for i in range(n):
+        l_ops = float(rng.uniform(1e3, 1e6))
+        l_mem = float(rng.uniform(1e3, 1e6))
+        pred = max(l_ops, l_mem) if async_dma else l_ops + l_mem
+        y = (a * max(l_ops, l_mem) if async_dma else a * l_ops + b * l_mem) + c
+        out.append(
+            MicrobenchSample(
+                graph=f"g{i}",
+                segment=f"s{i}",
+                module="m",
+                pattern="p",
+                route="reference",
+                l_ops=l_ops,
+                l_mem=l_mem,
+                async_dma=async_dma,
+                predicted_cycles=pred,
+                measured_us=y,
+                frequency_hz=freq,
+            )
+        )
+    return out
+
+
+def test_fit_recovers_sync_coefficients_exactly():
+    a, b, c = 3.0, 0.5, 4000.0
+    mc = fit_module(_synthetic_samples(a, b, c, async_dma=False))
+    assert mc.compute_scale == pytest.approx(a, rel=1e-6)
+    assert mc.mem_scale == pytest.approx(b, rel=1e-6)
+    assert mc.fixed_overhead_cycles == pytest.approx(c, rel=1e-4)
+    assert mc.mae_after < mc.mae_before
+    assert mc.mae_after == pytest.approx(0.0, abs=1e-3)
+
+
+def test_fit_recovers_async_coefficients_exactly():
+    a, c = 7.5, 900.0
+    mc = fit_module(_synthetic_samples(a, a, c, async_dma=True))
+    assert mc.compute_scale == pytest.approx(a, rel=1e-6)
+    assert mc.mem_scale == pytest.approx(a, rel=1e-6)
+    assert mc.fixed_overhead_cycles == pytest.approx(c, rel=1e-3)
+    assert mc.mae_after == pytest.approx(0.0, abs=1e-3)
+
+
+def test_fit_empty_and_degenerate_fall_back_to_identity_shape():
+    assert fit_module([]).is_identity()
+    # all-zero features: ratio denominator is zero -> identity scales
+    z = [
+        MicrobenchSample("g", "s", "m", "p", "r", 0.0, 0.0, False, 0.0, 10.0, 1e6)
+        for _ in range(3)
+    ]
+    mc = fit_module(z)
+    assert mc.compute_scale > 0 and mc.mem_scale > 0
+
+
+def test_fit_profile_groups_by_module_and_errors_drop():
+    samples = _synthetic_samples(2.0, 3.0, 100.0, async_dma=False)
+    prof = fit_profile(samples, target_name="gap9")
+    assert set(prof.modules) == {"m"}
+    errs = profile_errors(samples, prof)
+    assert errs["mae_after"] < errs["mae_before"]
+    assert errs["n"] == len(samples)
+
+
+# ---------------------------------------------------------------------------
+# Profile persistence + hardening
+# ---------------------------------------------------------------------------
+
+
+def _profile() -> CalibrationProfile:
+    return CalibrationProfile(
+        target="gap9",
+        modules={
+            "cluster": ModuleCalibration(2.0, 1.5, 120.0, samples=9),
+            "ne16": ModuleCalibration(3.0, 3.0, 50.0, samples=4),
+        },
+        meta={"note": "test"},
+    )
+
+
+def test_profile_roundtrip_and_fingerprint_stability(tmp_path):
+    prof = _profile()
+    p = prof.save(tmp_path / "prof.json")
+    loaded = load_profile(p)
+    assert loaded is not None
+    assert loaded.to_dict() == prof.to_dict()
+    assert loaded.fingerprint() == prof.fingerprint()
+    # fingerprint tracks content
+    other = _profile()
+    other.modules["cluster"] = ModuleCalibration(2.1, 1.5, 120.0)
+    assert other.fingerprint() != prof.fingerprint()
+
+
+@pytest.mark.parametrize(
+    "payload, why",
+    [
+        ("{not json", "corrupt JSON"),
+        ("[]", "unrecognized"),
+        ('{"target": "gap9", "modules": {}, "version": 99}', "stale version"),
+        ('{"target": "gap9", "modules": [], "version": 1}', "not a mapping"),
+        (
+            '{"target": "gap9", "version": 1, "modules": {"m": {"compute_scale": -1}}}',
+            "non-finite or non-positive",
+        ),
+    ],
+)
+def test_bad_profile_files_warn_and_return_none(tmp_path, payload, why):
+    p = tmp_path / "prof.json"
+    p.write_text(payload)
+    with pytest.warns(CalibrationProfileWarning, match=why):
+        assert load_profile(p) is None
+
+
+def test_unreadable_profile_warns(tmp_path):
+    p = tmp_path / "dir"
+    p.mkdir()
+    with pytest.warns(CalibrationProfileWarning, match="unreadable"):
+        assert load_profile(p) is None
+
+
+def test_apply_profile_warns_on_unknown_modules():
+    tgt = get_target("gap9", profile=None)
+    prof = _profile()
+    prof.modules["nonexistent"] = ModuleCalibration(2.0)
+    with pytest.warns(CalibrationProfileWarning, match="nonexistent"):
+        out = apply_profile(tgt, prof)
+    assert out.name == tgt.name
+    assert out.attrs["calibration"]["fingerprint"] == prof.fingerprint()
+    assert "nonexistent" not in out.attrs["calibration"]["modules"]
+
+
+# ---------------------------------------------------------------------------
+# Registry integration (get_target profile= / MATCH_CALIBRATION_PROFILE)
+# ---------------------------------------------------------------------------
+
+
+def test_get_target_applies_explicit_profile():
+    prof = _profile()
+    plain = get_target("gap9", profile=None)
+    cal = get_target("gap9", profile=prof)
+    assert cal.attrs["calibration"]["fingerprint"] == prof.fingerprint()
+    mc = prof.modules["cluster"]
+    base = plain.module("cluster")
+    got = cal.module("cluster")
+    assert got.compute.cycles_per_iter == pytest.approx(
+        base.compute.cycles_per_iter * mc.compute_scale
+    )
+    assert got.memories[0].bandwidth == pytest.approx(
+        base.memories[0].bandwidth / mc.mem_scale
+    )
+    assert got.compute.fixed_overhead_cycles == pytest.approx(mc.fixed_overhead_cycles)
+    # untouched module stays declared
+    assert cal.fallback.compute.cycles_per_iter == plain.fallback.compute.cycles_per_iter
+
+
+def test_get_target_explicit_profile_target_mismatch_raises():
+    prof = _profile()
+    with pytest.raises(ValueError, match="gap9"):
+        get_target("diana", profile=prof)
+
+
+def test_profile_applies_to_restricted_and_scaled_instances():
+    """A profile fitted on the full SoC must drive its bracketed derived
+    instances (Table IV ablations / Fig. 9 L1 scaling) through dispatch."""
+    prof = _profile()
+    g = conv_block_graph(IX=8, IY=8, C=8, K=8)
+    base = get_target("gap9", profile=None)
+    for derived in (base.restricted(["cluster"]), base.scaled_l1(32 * 1024)):
+        mg = dispatch(g, derived, profile=prof, budget=BUDGET)
+        assert mg.target.attrs["calibration"]["fingerprint"] == prof.fingerprint()
+        assert mg.total_cycles() > 0
+
+
+def test_env_profile_applies_and_mismatch_skips(tmp_path, monkeypatch):
+    prof = _profile()
+    path = prof.save(tmp_path / "prof.json")
+    monkeypatch.setenv("MATCH_CALIBRATION_PROFILE", str(path))
+    cal = get_target("gap9")
+    assert cal.attrs["calibration"]["fingerprint"] == prof.fingerprint()
+    # another target: env profile silently skipped, declared model used
+    diana = get_target("diana")
+    assert "calibration" not in diana.attrs
+    # explicit opt-out beats the env default
+    plain = get_target("gap9", profile=None)
+    assert "calibration" not in plain.attrs
+
+
+def test_env_profile_corrupt_warns_but_never_breaks_compiles(tmp_path, monkeypatch):
+    path = tmp_path / "prof.json"
+    path.write_text("{broken")
+    monkeypatch.setenv("MATCH_CALIBRATION_PROFILE", str(path))
+    with pytest.warns(CalibrationProfileWarning, match="corrupt"):
+        tgt = get_target("gap9")
+    g = conv_block_graph(IX=8, IY=8, C=8, K=8)
+    mg = dispatch(g, tgt, budget=BUDGET)
+    assert mg.total_cycles() > 0
+
+
+# ---------------------------------------------------------------------------
+# Calibrated dispatch: re-ranking + schedule-cache keying
+# ---------------------------------------------------------------------------
+
+
+def test_calibrated_dispatch_does_not_share_cache_entries(tmp_path):
+    """Declared and calibrated instances of the same target must key
+    different schedule-cache entries, and a warm calibrated dispatch must
+    hit them (warm == cold roundtrips keyed by the profile)."""
+    g = conv_block_graph(IX=8, IY=8, C=8, K=8)
+    cache = tmp_path / "sched.json"
+    prof = _profile()
+
+    clear_schedule_cache()
+    plain_planner = SchedulePlanner(cache_path=cache)
+    dispatch(g, get_target("gap9", profile=None), planner=plain_planner, budget=BUDGET)
+    n_plain = plain_planner.stats["searched"]
+    assert n_plain > 0
+
+    clear_schedule_cache()
+    cold = SchedulePlanner(cache_path=cache)
+    mg_cold = dispatch(g, get_target("gap9", profile=prof), planner=cold, budget=BUDGET)
+    assert cold.stats["searched"] > 0  # calibrated queries missed the plain entries
+
+    clear_schedule_cache()
+    warm = SchedulePlanner(cache_path=cache)
+    mg_warm = dispatch(g, get_target("gap9", profile=prof), planner=warm, budget=BUDGET)
+    assert warm.stats["searched"] == 0
+    assert warm.stats["disk_hits"] > 0
+    assert mg_warm.total_cycles() == pytest.approx(mg_cold.total_cycles())
+    assert [s.module for s in mg_warm.segments] == [s.module for s in mg_cold.segments]
+
+
+def test_dispatch_rejects_mismatched_profile_for_instance_targets():
+    """A profile fitted for another target must not be silently overlaid
+    on same-named modules of a MatchTarget instance."""
+    g = conv_block_graph(IX=8, IY=8, C=8, K=8)
+    prof = _profile()  # fitted for gap9
+    with pytest.raises(ValueError, match="gap9"):
+        dispatch(g, get_target("diana", profile=None), profile=prof, budget=BUDGET)
+
+
+def test_dispatch_profile_none_forces_declared_model(tmp_path, monkeypatch):
+    """dispatch mirrors get_target: profile=None opts out of the
+    MATCH_CALIBRATION_PROFILE env default, omitted applies it."""
+    path = _profile().save(tmp_path / "prof.json")
+    monkeypatch.setenv("MATCH_CALIBRATION_PROFILE", str(path))
+    g = conv_block_graph(IX=8, IY=8, C=8, K=8)
+    with_env = dispatch(g, "gap9", budget=BUDGET)
+    assert "calibration" in with_env.target.attrs
+    opt_out = dispatch(g, "gap9", profile=None, budget=BUDGET)
+    assert "calibration" not in opt_out.target.attrs
+
+
+def test_dispatch_profile_kwarg_reranks_with_calibrated_costs():
+    g = conv_block_graph(IX=8, IY=8, C=8, K=8)
+    prof = _profile()
+    plain = dispatch(g, "gap9", budget=BUDGET)
+    cal = dispatch(g, "gap9", profile=prof, budget=BUDGET)
+    assert cal.target.attrs["calibration"]["fingerprint"] == prof.fingerprint()
+    # scaled constants must move predicted cycles (re-ranking inputs)
+    assert cal.total_cycles() != pytest.approx(plain.total_cycles())
+
+
+def test_calibrated_compile_stays_bit_exact():
+    """Calibration changes cost constants only — never numerics."""
+    g = conv_block_graph(IX=8, IY=8, C=8, K=8)
+    tgt = get_target("gap9", profile=_profile())
+    compiled = lower(dispatch(g, tgt, budget=BUDGET))
+    params, x = graph_io(g)
+    assert compiled.verify(params, x) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Microbench + report_dict plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_collect_samples_and_report_dict_share_the_payload():
+    g = conv_block_graph(IX=8, IY=8, C=8, K=8)
+    compiled = lower(dispatch(g, "gap9", budget=BUDGET))
+    params, x = graph_io(g)
+    samples = collect_samples(compiled, params, x, repeats=1)
+    assert samples, "scheduled segments must produce samples"
+    for s in samples:
+        assert s.measured_us > 0 and s.frequency_hz > 0
+        assert math.isfinite(s.l_ops) and math.isfinite(s.l_mem)
+        assert s.measured_cycles == pytest.approx(s.measured_us * 1e-6 * s.frequency_hz)
+
+    rd = compiled.report_dict()
+    json.dumps(rd)  # must be JSON-safe
+    assert rd["graph"] == g.name and rd["target"] == "gap9"
+    assert rd["predicted_total_cycles"] == pytest.approx(compiled.predicted_cycles())
+    assert rd["memory_plan"]["fits"] is True
+    names = {row["name"] for row in rd["segments"]}
+    assert {s.segment for s in samples} <= names
+    # timed run was recorded by collect_samples -> timings present
+    assert "timings" in rd and rd["measured_total_us"] > 0
+    by_name = {row["name"]: row for row in rd["segments"]}
+    for s in samples:
+        row = by_name[s.segment]
+        assert row["l_ops"] == pytest.approx(s.l_ops)
+        assert row["l_mem"] == pytest.approx(s.l_mem)
+
+
+def test_run_microbench_covers_every_module(tmp_path):
+    from repro.calibrate import load_samples, save_samples
+
+    sweep = [conv_block_graph(IX=8, IY=8, C=8, K=8), dense_block_graph(K=16, C=32)]
+    samples = run_microbench("gap9", sweep=sweep, repeats=1, budget=200)
+    mods = {s.module for s in samples}
+    assert mods == {"cluster", "ne16", "cpu"}
+    p = save_samples(tmp_path / "s.json", samples, target="gap9")
+    tname, loaded = load_samples(p)
+    assert tname == "gap9" and len(loaded) == len(samples)
+    assert loaded[0].to_dict() == samples[0].to_dict()
+
+
+def test_dense_block_graph_executes():
+    g = dense_block_graph(K=16, C=32)
+    compiled = lower(dispatch(g, "gap9", budget=200))
+    params, x = graph_io(g)
+    assert compiled.verify(params, x) == 0.0
