@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig7,table3,...] [--target gap9]
                                           [--list-targets] [--json [PATH]]
+                                          [--repeat N]
 
 ``--target`` takes any registered target name (``repro.targets.registry``,
 see ``list_targets()``) and is forwarded to every benchmark whose ``run``
@@ -35,6 +36,14 @@ def main() -> None:
         "--list-targets",
         action="store_true",
         help="print every registered target (plugins included) and exit",
+    )
+    ap.add_argument(
+        "--repeat",
+        type=int,
+        default=0,
+        metavar="N",
+        help="measurement rounds for benches that take medians "
+        "(pipeline_throughput); 0 keeps each bench's default",
     )
     ap.add_argument(
         "--json",
@@ -69,6 +78,7 @@ def main() -> None:
         fig8_gap9_micro,
         fig9_10_l1_scaling,
         fig11_resnet_mapping,
+        pipeline_throughput,
         pod_roofline_summary,
         table3_e2e,
         table4_heterogeneity,
@@ -85,6 +95,7 @@ def main() -> None:
         "dispatch_scaling": dispatch_scaling,
         "compiled_e2e": compiled_e2e,
         "calibration_accuracy": calibration_accuracy,
+        "pipeline_throughput": pipeline_throughput,
         "tpu_kernels": tpu_kernel_schedules,
         "pod_roofline": pod_roofline_summary,
     }
@@ -96,8 +107,11 @@ def main() -> None:
         if only and name not in only:
             continue
         kwargs = {}
-        if args.target and "target" in inspect.signature(mod.run).parameters:
+        sig = inspect.signature(mod.run).parameters
+        if args.target and "target" in sig:
             kwargs["target"] = args.target
+        if args.repeat > 0 and "repeat" in sig:
+            kwargs["repeat"] = args.repeat
         common.drain_rows()
         try:
             mod.run(**kwargs)

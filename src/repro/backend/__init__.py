@@ -18,7 +18,13 @@ this package walks a :class:`~repro.core.dispatcher.MappedGraph` and
 
 from .lower import LoweredSegment, LoweringError, lower
 from .memory import BufferAlloc, MemoryPlan, MemoryPlanError, plan_memory
-from .runtime import CompiledModel
+from .runtime import (
+    CompiledModel,
+    DivergenceReport,
+    SegmentDivergence,
+    SegmentTiming,
+    UnsetFrequencyWarning,
+)
 
 __all__ = [
     "lower",
@@ -29,4 +35,8 @@ __all__ = [
     "MemoryPlanError",
     "BufferAlloc",
     "CompiledModel",
+    "DivergenceReport",
+    "SegmentDivergence",
+    "SegmentTiming",
+    "UnsetFrequencyWarning",
 ]

@@ -43,8 +43,11 @@ class BufferAlloc:
     name: str
     nbytes: int
     offset: int
-    start: int  # first segment index (inclusive) the buffer is live at
-    end: int  # first segment index it is dead at (exclusive)
+    # live interval, [start, end): segment indices in the sequential
+    # plan, schedule times (cycles) in the pipeline-aware plan — the
+    # packer and the overlap checks only ever compare them
+    start: float
+    end: float
 
     def overlaps_time(self, other: "BufferAlloc") -> bool:
         return not (self.end <= other.start or other.end <= self.start)
@@ -153,16 +156,32 @@ class MemoryPlan:
 
 
 def _first_fit(
-    order: list[str], lives: dict[str, tuple[int, int, int]]
+    order: list[str],
+    lives: dict[str, tuple[int, float, float]],
+    conflicts=None,
 ) -> tuple[dict[str, int], int]:
-    """Place buffers in ``order``; returns (offsets, arena peak bytes)."""
-    placed: list[tuple[int, int, int, int]] = []  # (offset, nbytes, start, end)
+    """Place buffers in ``order``; returns (offsets, arena peak bytes).
+
+    Two buffers may share arena bytes unless they *conflict*.  The
+    default relation is live-interval overlap (sound for the sequential
+    plan, where intervals are segment indices and execution follows
+    them); the pipeline plan passes an explicit happens-before-based
+    predicate instead, because the concurrent runtime is dependency-
+    driven and predicted schedule times carry no execution guarantee.
+    """
+    if conflicts is None:
+        def conflicts(a: str, b: str) -> bool:
+            _, s1, e1 = lives[a]
+            _, s2, e2 = lives[b]
+            return not (e1 <= s2 or e2 <= s1)
+
+    placed: list[tuple[str, int, int]] = []  # (name, offset, nbytes)
     offsets: dict[str, int] = {}
     peak = 0
     for name in order:
-        nb, s, e = lives[name]
+        nb = lives[name][0]
         spans = sorted(
-            (o, o + n) for o, n, s2, e2 in placed if not (e2 <= s or e <= s2)
+            (o, o + n) for nm, o, n in placed if conflicts(name, nm)
         )
         off = 0
         for lo, hi in spans:
@@ -170,31 +189,200 @@ def _first_fit(
                 break
             off = max(off, hi)
         offsets[name] = off
-        placed.append((off, nb, s, e))
+        placed.append((name, off, nb))
         peak = max(peak, off + nb)
     return offsets, peak
 
 
 def _hill_climb(
     order: list[str],
-    lives: dict[str, tuple[int, int, int]],
+    lives: dict[str, tuple[int, float, float]],
     iters: int,
     seed: int,
+    conflicts=None,
 ) -> tuple[dict[str, int], int]:
     """Bounded stochastic hill-climb over the first-fit allocation order."""
     rng = random.Random(seed)
     best_order = list(order)
-    best_offsets, best_peak = _first_fit(best_order, lives)
+    best_offsets, best_peak = _first_fit(best_order, lives, conflicts)
     if len(order) < 2:
         return best_offsets, best_peak
     for _ in range(iters):
         i, j = rng.sample(range(len(best_order)), 2)
         cand = list(best_order)
         cand[i], cand[j] = cand[j], cand[i]
-        offsets, peak = _first_fit(cand, lives)
+        offsets, peak = _first_fit(cand, lives, conflicts)
         if peak < best_peak:
             best_order, best_offsets, best_peak = cand, offsets, peak
     return best_offsets, best_peak
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-aware liveness (repro.pipeline)
+# ---------------------------------------------------------------------------
+
+
+def _pipeline_lives(
+    seq_lives: dict,
+    mapped: MappedGraph,
+    schedule,
+    stream_depth: int,
+) -> dict:
+    """Re-express buffer liveness on the pipeline schedule's timeline.
+
+    A buffer is live from its producing segment's *start* (the executor
+    materializes the output during the slot) to its last consumer's
+    *finish*; graph inputs are live from t=0, graph outputs to past the
+    makespan.  Segments the scheduler overlaps therefore conflict in the
+    arena even when their sequential segment indices would not.  With
+    ``stream_depth`` > 1 every buffer gets one rotating copy per extra
+    in-flight input (``name@q1``...), all sharing the interval — the
+    steady-state inter-stage queues of ``run_stream``.
+    """
+    graph, segments = mapped.graph, mapped.segments
+    start = {e.index: e.start for e in schedule.entries}
+    finish = {e.index: e.finish for e in schedule.entries}
+    horizon = max(schedule.makespan, 1.0)
+    node_seg = {nd.name: i for i, seg in enumerate(segments) for nd in seg.nodes}
+    consumed_by: dict[str, list[int]] = {}
+    for i, seg in enumerate(segments):
+        for src in seg.external_inputs(graph):
+            consumed_by.setdefault(src, []).append(i)
+    outputs = set(graph.outputs)
+    out: dict[str, tuple[int, float, float]] = {}
+    for name, (nb, _s, _e) in seq_lives.items():
+        prod_seg = node_seg.get(name)
+        t0 = 0.0 if prod_seg is None else start[prod_seg]
+        ends = [finish[c] for c in consumed_by.get(name, [])]
+        if prod_seg is not None:
+            ends.append(finish[prod_seg])
+        t1 = (horizon + 1.0) if name in outputs else max(ends, default=t0)
+        # a zero-cost structural slot still needs its buffer for a moment
+        t1 = max(t1, t0 + 1.0)
+        for q in range(stream_depth):
+            out[name if q == 0 else f"{name}@q{q}"] = (nb, t0, t1)
+    return out
+
+
+def _happens_before(schedule) -> list[set[int]]:
+    """before[j]: segment indices guaranteed complete before segment j
+    starts at RUNTIME.
+
+    The pipelined runtime enforces exactly two orderings: data
+    dependencies (futures) and per-module lane serialisation (each
+    module's worker walks its lane in order).  Predicted schedule
+    *times* guarantee nothing — host wall-clock is unrelated to modeled
+    cycles — so soundness arguments must use this relation, never the
+    intervals.  Both edge kinds point from lower to higher segment
+    index, so one pass in index order closes the relation transitively.
+    """
+    entries = sorted(schedule.entries, key=lambda e: e.index)
+    preds = [set(e.deps) for e in entries]
+    for lane in schedule.lanes().values():
+        for a, b in zip(lane, lane[1:]):
+            preds[b.index].add(a.index)
+    before: list[set[int]] = [set() for _ in entries]
+    for j in range(len(entries)):
+        for p in preds[j]:
+            before[j] |= before[p]
+            before[j].add(p)
+    return before
+
+
+def _pipeline_conflict_fn(mapped: MappedGraph, before: list[set[int]]):
+    """Happens-before-based buffer conflict relation for the concurrent
+    plan: buffers X and Y may share arena bytes only when one is
+    provably dead (all its users complete) before the other's producer
+    can start.  Rotating stream copies (``name@qN``) belong to different
+    in-flight inputs, between which no ordering exists: cross-slot pairs
+    always conflict; same-slot pairs belong to the same input and use
+    the happens-before rule."""
+    graph, segments = mapped.graph, mapped.segments
+    users: dict[str, set[int]] = {name: set() for name in graph.inputs}
+    producer: dict[str, int] = {}
+    for i, seg in enumerate(segments):
+        out = seg.output_node.name
+        users[out] = {i}
+        producer[out] = i
+    for i, seg in enumerate(segments):
+        for src in seg.external_inputs(graph):
+            if src in users:
+                users[src].add(i)
+    eternal = set(graph.outputs)
+
+    def split(n: str) -> tuple[str, int]:
+        base, sep, q = n.rpartition("@q")
+        if sep and q.isdigit():
+            return base, int(q)
+        return n, 0
+
+    def dead_before(base: str, q) -> bool:
+        if q is None or base in eternal:
+            return False
+        return all(u in before[q] for u in users.get(base, ()))
+
+    def conflicts(a: str, b: str) -> bool:
+        ba, qa = split(a)
+        bb, qb = split(b)
+        if qa != qb:
+            return True
+        return not (
+            dead_before(ba, producer.get(bb)) or dead_before(bb, producer.get(ba))
+        )
+
+    return conflicts
+
+
+def _concurrent_level_peaks(
+    segments,
+    usages: list[dict[str, int]],
+    before: list[set[int]],
+    stream_depth: int,
+) -> dict[str, int]:
+    """Per-level peak working-set bytes under concurrent execution.
+
+    Levels are keyed by name, exactly as ``level_caps``/``level_peaks``
+    are: two modules declaring the same level name share the physical
+    memory (gap9 declares one ``L1`` object for cluster and NE16).  At
+    any instant each module runs at most one segment (lanes are
+    serial), so the resident set is one working set per module.
+
+    * ``stream_depth == 1`` — happens-before bound: for each segment i,
+      charge i's working set plus, per *other* module, the largest
+      working set among segments unordered with i (those are the only
+      ones the runtime could co-schedule).  This dominates every
+      realisable antichain: if A is the worst concurrent set and i its
+      largest member, every other member of A is unordered with i and
+      counted at (or below) its module's max.
+    * ``stream_depth > 1`` — steady-state streaming bound: segments of
+      different in-flight inputs have no ordering at all, so each
+      level's peak is the sum over modules of that module's largest
+      working set.
+    """
+    per_mod: dict[str, dict[str, int]] = {}
+    for i, u in enumerate(usages):
+        m = segments[i].module
+        for lvl, b in u.items():
+            d = per_mod.setdefault(lvl, {})
+            d[m] = max(d.get(m, 0), b)
+    if stream_depth > 1:
+        return {lvl: sum(d.values()) for lvl, d in per_mod.items()}
+
+    def unordered(i: int, j: int) -> bool:
+        return i not in before[j] and j not in before[i]
+
+    peaks: dict[str, int] = {}
+    for i, ui in enumerate(usages):
+        for lvl, b in ui.items():
+            co: dict[str, int] = {}
+            for j, uj in enumerate(usages):
+                if j == i or segments[j].module == segments[i].module:
+                    continue  # lane-serialised with i's module
+                if lvl in uj and unordered(i, j):
+                    m = segments[j].module
+                    co[m] = max(co.get(m, 0), uj[lvl])
+            peaks[lvl] = max(peaks.get(lvl, 0), b + sum(co.values()))
+    return peaks
 
 
 # ---------------------------------------------------------------------------
@@ -208,17 +396,40 @@ def plan_memory(
     allow_spill: bool = True,
     hill_climb_iters: int = 200,
     seed: int = 0,
+    schedule=None,
+    stream_depth: int = 1,
 ) -> MemoryPlan:
-    """Plan static memory for ``mapped``'s segment execution order."""
+    """Plan static memory for ``mapped``'s segment execution order.
+
+    ``schedule`` (a :class:`repro.pipeline.schedule.PipelineSchedule`)
+    switches the plan to *concurrent-execution* semantics: two buffers
+    may share arena bytes only when one provably dies before the other
+    is born under what the pipelined runtime actually enforces — data
+    dependencies plus per-module lane order (``_happens_before``), never
+    the predicted schedule times (host wall-clock owes them nothing).
+    Working sets of modules sharing a level by name are summed over
+    co-schedulable segments, spilling the largest contributor on
+    overflow.  ``stream_depth`` > 1 (``PipelinedModel.run_stream``)
+    additionally reserves one rotating queue copy per in-flight input
+    for every buffer (``name@q1`` ...), the double-buffered inter-stage
+    queues of classic software pipelining; cross-input pairs always
+    conflict and shared levels charge every module's maximum at once.
+    """
     graph, target = mapped.graph, mapped.target
     segments = mapped.segments
     n = len(segments)
     home = target.fallback.memories[-1]
+    if stream_depth < 1:
+        raise ValueError(f"stream_depth must be >= 1, got {stream_depth}")
+    if stream_depth > 1 and schedule is None:
+        raise ValueError("stream_depth > 1 needs the pipeline schedule")
 
     # ---- liveness over the segment order --------------------------------
     # (nbytes, start, end); graph inputs are live from the start, graph
-    # outputs to the end.
-    lives: dict[str, tuple[int, int, int]] = {}
+    # outputs to the end.  Start/end are segment indices in the
+    # sequential plan and schedule times (cycles) in the pipeline plan —
+    # the packer below only ever compares them.
+    lives: dict[str, tuple[int, float, float]] = {}
     consumer_elem = {
         name: max(
             (int(c.attr("elem_bytes", 1) or 1) for c in graph.consumers(name)),
@@ -246,9 +457,26 @@ def plan_memory(
             nb, s, _ = lives[o]
             lives[o] = (nb, s, n + 1)
 
+    plan_attrs: dict = {"hill_climb_iters": hill_climb_iters}
+    conflict_fn = None
+    before: list[set[int]] = []
+    if schedule is not None:
+        lives = _pipeline_lives(lives, mapped, schedule, stream_depth)
+        # aliasing decisions must follow what the dependency-driven
+        # runtime guarantees (happens-before), not the predicted times —
+        # the intervals above are kept for reporting and self-checks
+        # (they are a subset of the happens-before conflicts)
+        before = _happens_before(schedule)
+        conflict_fn = _pipeline_conflict_fn(mapped, before)
+        plan_attrs.update(
+            pipeline=True,
+            stream_depth=stream_depth,
+            makespan_cycles=schedule.makespan,
+        )
+
     # ---- home-level arena: first-fit + hill-climb -----------------------
     order = sorted(lives, key=lambda k: (lives[k][1], -lives[k][0], k))
-    offsets, peak = _hill_climb(order, lives, hill_climb_iters, seed)
+    offsets, peak = _hill_climb(order, lives, hill_climb_iters, seed, conflict_fn)
     buffers = {
         name: BufferAlloc(name, lives[name][0], offsets[name], lives[name][1], lives[name][2])
         for name in lives
@@ -287,8 +515,44 @@ def plan_memory(
                 spills.append(seg.anchor.name)
                 usage = {}  # streams from home instead of running resident
         l1_by_segment.append(usage)
-        for lvl_name, used in usage.items():
-            level_peaks[lvl_name] = max(level_peaks.get(lvl_name, 0), used)
+
+    if schedule is None:
+        # sequential execution: one segment resident at a time, so each
+        # level's peak is the largest single working set
+        for usage in l1_by_segment:
+            for lvl_name, used in usage.items():
+                level_peaks[lvl_name] = max(level_peaks.get(lvl_name, 0), used)
+    else:
+        # concurrent execution: modules sharing a level (same name, e.g.
+        # gap9's cluster + NE16 on one L1) occupy it SIMULTANEOUSLY, so
+        # concurrently-scheduled working sets sum.  When the summed peak
+        # overflows, the largest contributor spills (streams from home,
+        # same semantics as the per-segment rule above) until it fits.
+        while True:
+            peaks = _concurrent_level_peaks(
+                segments, l1_by_segment, before, stream_depth
+            )
+            over = sorted(
+                (lvl, b)
+                for lvl, b in peaks.items()
+                if b > level_caps.get(lvl, b)
+            )
+            if not over:
+                level_peaks.update(peaks)
+                break
+            lvl, b = over[0]
+            if not allow_spill:
+                raise MemoryPlanError(
+                    f"{graph.name} on {target.name}: concurrent working "
+                    f"sets exceed {lvl} ({b} > {level_caps[lvl]} B) under "
+                    f"the pipeline schedule (stream_depth={stream_depth})"
+                )
+            victim = max(
+                range(len(l1_by_segment)),
+                key=lambda i: l1_by_segment[i].get(lvl, 0),
+            )
+            spills.append(segments[victim].anchor.name)
+            l1_by_segment[victim] = {}
 
     from repro.cnn.analysis import weight_bytes  # graph-generic, no cycle
 
@@ -302,5 +566,5 @@ def plan_memory(
         l1_by_segment=l1_by_segment,
         weight_bytes=weight_bytes(graph),
         spills=tuple(spills),
-        attrs={"hill_climb_iters": hill_climb_iters},
+        attrs=plan_attrs,
     )

@@ -14,6 +14,7 @@ Bit-exactness contract: ``run(params, inputs)`` returns exactly what
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING
 
@@ -27,7 +28,24 @@ if TYPE_CHECKING:  # avoid a circular import with .lower
     from .lower import LoweredSegment
     from .memory import MemoryPlan
 
-__all__ = ["CompiledModel", "SegmentTiming"]
+__all__ = [
+    "CompiledModel",
+    "DivergenceReport",
+    "SegmentDivergence",
+    "SegmentTiming",
+    "UnsetFrequencyWarning",
+]
+
+
+class UnsetFrequencyWarning(RuntimeWarning):
+    """A SegmentTiming converted wall-clock to cycles with no clock set.
+
+    ``frequency_hz`` defaults to 0.0, which silently turns every
+    ``measured_cycles`` into 0 — a poisoned sample that would drag a
+    calibration fit toward zero.  The conversion warns (and
+    ``repro.calibrate.microbench`` raises) so it can never happen
+    unnoticed.
+    """
 
 
 @dataclass(frozen=True)
@@ -45,6 +63,15 @@ class SegmentTiming:
 
     @property
     def measured_cycles(self) -> float:
+        if self.frequency_hz <= 0.0:
+            warnings.warn(
+                f"SegmentTiming[{self.name}]: frequency_hz is unset "
+                f"({self.frequency_hz}); measured_cycles is 0 and would "
+                "poison a calibration fit",
+                UnsetFrequencyWarning,
+                stacklevel=2,
+            )
+            return 0.0
         return self.measured_us * 1e-6 * self.frequency_hz
 
     def to_dict(self) -> dict:
@@ -57,6 +84,60 @@ class SegmentTiming:
             "frequency_hz": self.frequency_hz,
             "measured_cycles": self.measured_cycles,
         }
+
+
+@dataclass(frozen=True)
+class SegmentDivergence:
+    """Per-segment output deviation vs the reference interpreter."""
+
+    name: str
+    module: str
+    route: str
+    output_name: str
+    max_abs_err: float
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "module": self.module,
+            "route": self.route,
+            "output_name": self.output_name,
+            "max_abs_err": self.max_abs_err,
+        }
+
+
+@dataclass(frozen=True)
+class DivergenceReport:
+    """Localized bit-exactness check: every segment's output compared
+    against the interpreter's value for the same node, in execution
+    order — so a broken kernel names itself instead of hiding behind a
+    single global max-abs number."""
+
+    max_abs_err: float
+    segments: tuple[SegmentDivergence, ...]
+
+    @property
+    def exact(self) -> bool:
+        return self.max_abs_err == 0.0
+
+    @property
+    def first_divergent(self) -> SegmentDivergence | None:
+        """The first segment (execution order) whose output deviates —
+        downstream errors are usually just this one propagating."""
+        for s in self.segments:
+            if s.max_abs_err > 0.0:
+                return s
+        return None
+
+    def summary(self) -> str:
+        first = self.first_divergent
+        if first is None:
+            return f"bit-exact across {len(self.segments)} segments"
+        return (
+            f"max |err| {self.max_abs_err}; first divergence at segment "
+            f"{first.name} ({first.module}/{first.route}): "
+            f"|{first.output_name} - ref| = {first.max_abs_err}"
+        )
 
 
 @dataclass
@@ -116,8 +197,17 @@ class CompiledModel:
     def last_timings(self) -> list[SegmentTiming]:
         return list(self._last_timings)
 
-    def verify(self, params: dict, inputs: dict) -> float:
-        """Max abs deviation vs the reference interpreter (0.0 = bit-exact)."""
+    def verify(self, params: dict, inputs: dict, *, per_segment: bool = False):
+        """Max abs deviation vs the reference interpreter (0.0 = bit-exact).
+
+        ``per_segment=True`` returns a :class:`DivergenceReport` instead
+        of the bare float: every segment output compared against the
+        interpreter's value for that node, localizing the *first*
+        deviating segment (the actionable one — everything after it is
+        usually propagation).
+        """
+        if per_segment:
+            return self._verify_per_segment(params, inputs)
         from repro.cnn.execute import execute_graph
 
         ref = execute_graph(self.graph, params, inputs)
@@ -126,6 +216,33 @@ class CompiledModel:
         for k in ref:
             err = max(err, float(jnp.max(jnp.abs(ref[k] - got[k]))))
         return err
+
+    def _verify_per_segment(self, params: dict, inputs: dict) -> DivergenceReport:
+        from repro.cnn.execute import apply_node
+
+        # full interpreter env: every node's reference value, not just
+        # the graph outputs (segment boundaries are internal nodes)
+        ref_env: dict[str, jnp.ndarray] = {
+            k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()
+        }
+        for n in self.graph.nodes:
+            ref_env[n.name] = apply_node(
+                n, params.get(n.name, {}), [ref_env[i] for i in n.inputs]
+            )
+        env: dict[str, jnp.ndarray] = {
+            k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()
+        }
+        rows: list[SegmentDivergence] = []
+        worst = 0.0
+        for ls in self.segments:
+            out = ls.fn(ls.params_slice(params), *[env[nm] for nm in ls.input_names])
+            env[ls.output_name] = out
+            err = float(jnp.max(jnp.abs(ref_env[ls.output_name] - out)))
+            worst = max(worst, err)
+            rows.append(
+                SegmentDivergence(ls.name, ls.module, ls.route, ls.output_name, err)
+            )
+        return DivergenceReport(max_abs_err=worst, segments=tuple(rows))
 
     # -- accounting -----------------------------------------------------
     def predicted_cycles(self) -> float:
@@ -145,6 +262,21 @@ class CompiledModel:
         for ls in self.segments:
             out[ls.route] = out.get(ls.route, 0) + 1
         return out
+
+    def pipeline_schedule(self):
+        """The concurrent multi-module schedule of this model's mapping
+        (:func:`repro.pipeline.schedule.schedule_pipeline`) — per-segment
+        start/finish on each module's clock and the predicted makespan.
+        Pure cost-model arithmetic, computed on demand."""
+        from repro.pipeline.schedule import schedule_pipeline  # no cycle: late
+
+        return schedule_pipeline(self.mapped)
+
+    def predicted_makespan(self) -> float:
+        """End-to-end cycles when modules run concurrently; equals
+        ``predicted_cycles()`` exactly on single-module mappings and is
+        never larger."""
+        return self.pipeline_schedule().makespan
 
     def report_dict(self) -> dict:
         """Machine-readable companion of :meth:`report`: predicted cycles,
@@ -183,6 +315,9 @@ class CompiledModel:
             "predicted_latency_s": self.predicted_latency_s(),
             "cycles_by_module": self.cycles_by_module(),
             "memory_plan": self.memory_plan.to_dict(),
+            # Gantt-style concurrent schedule (repro.pipeline): per-module
+            # lanes with start/finish plus the predicted makespan
+            "pipeline": self.pipeline_schedule().timeline_dict(),
         }
         if measured:
             out["measured_total_us"] = sum(tm.measured_us for tm in self._last_timings)

@@ -58,7 +58,21 @@ class MicrobenchSample:
     @property
     def measured_cycles(self) -> float:
         """Measured wall-clock expressed in the module's clock domain —
-        the quantity the fitter regresses the model features against."""
+        the quantity the fitter regresses the model features against.
+
+        Raises on an unset (``<= 0``) frequency instead of silently
+        yielding 0 cycles: a zeroed sample would drag the least-squares
+        fit toward a degenerate all-zero model, which is far worse than
+        failing the sweep loudly (the warn-only path lives in
+        ``repro.backend.runtime.SegmentTiming``).
+        """
+        if self.frequency_hz <= 0.0:
+            raise ValueError(
+                f"microbench sample {self.graph}/{self.segment} on "
+                f"{self.module} has frequency_hz={self.frequency_hz}; an "
+                "unset module clock would zero measured_cycles and poison "
+                "the calibration fit — declare ExecutionModule.frequency_hz"
+            )
         return self.measured_us * 1e-6 * self.frequency_hz
 
     def to_dict(self) -> dict:
@@ -176,6 +190,12 @@ def collect_samples(compiled, params, inputs, *, repeats: int = 3) -> list[Micro
         if seg.schedule is None or ls.name not in best_us:
             continue
         module = target.module(seg.module)
+        if module.frequency_hz <= 0.0:
+            raise ValueError(
+                f"module {module.name} declares frequency_hz="
+                f"{module.frequency_hz}; cannot convert measured wall-clock "
+                "to cycles — fix the target declaration before sweeping"
+            )
         feats = seg.schedule.cost.features()
         samples.append(
             MicrobenchSample(

@@ -298,6 +298,12 @@ class _State:
     mod_of: dict  # node name -> module name for every covered node
 
 
+# complete segmentations the DP keeps for makespan re-ranking: enough
+# beam survivors that a sum-suboptimal but overlap-friendly mapping is
+# still on the table, small enough that scheduling them all is free
+_FINALS_KEPT = 64
+
+
 def _dispatch_dp(
     graph: Graph,
     target: MatchTarget,
@@ -305,6 +311,7 @@ def _dispatch_dp(
     budget: int,
     beam: int,
     verbose: bool,
+    objective: str = "cycles",
 ) -> MappedGraph:
     nodes = graph.nodes
     n = len(nodes)
@@ -335,6 +342,14 @@ def _dispatch_dp(
 
     states: list[dict[tuple, _State]] = [dict() for _ in range(n + 1)]
     states[0][()] = _State(0.0, (), {})
+    # complete segmentations keyed by (boundaries, modules): the state key
+    # at position n collapses to () (nothing stays live), which would keep
+    # exactly one survivor — the makespan objective needs the runners-up.
+    # Under objective="cycles" only the running minimum is kept (no
+    # signature bookkeeping in the DP hot loop).
+    track_finals = objective == "makespan"
+    finals: dict[tuple, _State] = {}
+    best_final: _State | None = None
 
     for i in range(n):
         here = states[i]
@@ -364,20 +379,46 @@ def _dispatch_dp(
                 cur = states[j].get(key)
                 if cur is None or cost < cur.cost:
                     states[j][key] = _State(cost, st.segments + (seg,), mod_of)
+                if j == n:
+                    if track_finals:
+                        done = _State(cost, st.segments + (seg,), mod_of)
+                        sig = tuple(
+                            (s.anchor.name, s.module, len(s.nodes))
+                            for s in done.segments
+                        )
+                        old = finals.get(sig)
+                        if old is None or done.cost < old.cost:
+                            finals[sig] = done
+                    elif best_final is None or cost < best_final.cost:
+                        best_final = _State(cost, st.segments + (seg,), mod_of)
 
-    final = min(states[n].values(), key=lambda s: s.cost)
+    attrs = {"policy": "dp", "objective": objective, "planner_stats": dict(planner.stats)}
+    if objective == "makespan":
+        # re-rank the surviving complete segmentations by their scheduled
+        # concurrent makespan (ties broken by the cycle sum, so chains
+        # with no overlap opportunity reproduce the cycles objective)
+        from repro.pipeline.schedule import schedule_pipeline  # no cycle: late
+
+        ranked = sorted(finals.values(), key=lambda s: s.cost)[:_FINALS_KEPT]
+        best: _State | None = None
+        best_key: tuple[float, float] | None = None
+        for st in ranked:
+            ps = schedule_pipeline(MappedGraph(graph, target, list(st.segments)))
+            key = (ps.makespan, st.cost)
+            if best_key is None or key < best_key:
+                best, best_key = st, key
+        final = best
+        attrs["predicted_makespan"] = best_key[0]
+        attrs["candidates_reranked"] = len(ranked)
+    else:
+        final = best_final
     if verbose:
         for s in final.segments:
             print(
                 f"  dispatch {s.anchor.name} -> {s.module}"
                 f" ({s.cycles:.0f} cyc + {s.transfer_cycles:.0f} xfer)"
             )
-    return MappedGraph(
-        graph,
-        target,
-        list(final.segments),
-        attrs={"policy": "dp", "planner_stats": dict(planner.stats)},
-    )
+    return MappedGraph(graph, target, list(final.segments), attrs=attrs)
 
 
 # ---------------------------------------------------------------------------
@@ -474,6 +515,7 @@ def dispatch(
     *,
     budget: int = 4000,
     policy: str = "dp",
+    objective: str = "cycles",
     beam: int = 12,
     planner: SchedulePlanner | None = None,
     cache_path=None,
@@ -487,6 +529,14 @@ def dispatch(
     retargeting entry point).
     ``policy="dp"`` (default) runs the transfer-aware DP partitioner;
     ``policy="greedy"`` keeps the legacy largest-match walk as a baseline.
+    ``objective`` selects what the DP minimises: ``"cycles"`` (default)
+    keeps the sequential sum of compute + transfer cycles;
+    ``"makespan"`` re-ranks the DP's surviving complete segmentations by
+    their *concurrently scheduled* makespan
+    (:func:`repro.pipeline.schedule.schedule_pipeline` — each execution
+    module a resource with its own clock), so independent branches are
+    worth spreading across modules.  Ties fall back to the cycle sum,
+    which keeps skipless chains identical under both objectives.
     ``planner`` / ``cache_path`` control schedule batching and the
     persistent DSE cache (see :class:`~repro.core.loma.SchedulePlanner`).
     ``profile`` applies a :class:`~repro.calibrate.CalibrationProfile`
@@ -523,11 +573,18 @@ def dispatch(
                 f"not {target.name!r}"
             )
         target = apply_profile(target, prof)
+    if objective not in ("cycles", "makespan"):
+        raise ValueError(f"unknown dispatch objective {objective!r}")
     if policy == "greedy":
         if planner is not None or cache_path is not None:
             raise ValueError(
                 "policy='greedy' searches serially and does not use the "
                 "schedule planner; drop planner=/cache_path= (DP only)"
+            )
+        if objective != "cycles":
+            raise ValueError(
+                "policy='greedy' picks segments locally and cannot optimise "
+                "a schedule-level objective; use policy='dp' for makespan"
             )
         return _dispatch_greedy(graph, target, budget, verbose)
     if policy != "dp":
@@ -539,4 +596,4 @@ def dispatch(
         )
     if planner is None:
         planner = SchedulePlanner(cache_path=cache_path)
-    return _dispatch_dp(graph, target, planner, budget, beam, verbose)
+    return _dispatch_dp(graph, target, planner, budget, beam, verbose, objective)

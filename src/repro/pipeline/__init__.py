@@ -1,0 +1,36 @@
+"""repro.pipeline — makespan-aware concurrent multi-module execution.
+
+The dispatcher (PR 1) prices cross-module transfers and the backend
+(PR 2) executes segments one at a time; this subsystem is the step the
+paper's GAP9 result implies but the sequential runtime never takes:
+running segments mapped to *different* execution modules concurrently,
+each module a resource with its own clock.
+
+* :mod:`repro.pipeline.schedule` — event-driven list scheduler producing
+  a :class:`PipelineSchedule` (per-segment start/finish, module
+  occupancy, predicted makespan) from any ``MappedGraph``.
+* :mod:`repro.pipeline.runtime` — :class:`PipelinedModel`, a
+  ``CompiledModel`` wrapper with one worker thread per module plus
+  ``run_stream`` inter-input software pipelining.
+
+``dispatch(..., objective="makespan")`` (repro.core) re-ranks the DP's
+surviving segmentations by scheduled makespan through this package.
+"""
+
+from .schedule import (
+    PipelineSchedule,
+    PipelineScheduleError,
+    ScheduledSegment,
+    schedule_pipeline,
+    segment_deps,
+)
+from .runtime import PipelinedModel
+
+__all__ = [
+    "PipelineSchedule",
+    "PipelineScheduleError",
+    "PipelinedModel",
+    "ScheduledSegment",
+    "schedule_pipeline",
+    "segment_deps",
+]

@@ -1,17 +1,22 @@
-"""The pipeline contract every registered target must satisfy.
+"""Conformance contract of the concurrent pipeline subsystem (PR 5).
 
-Parametrized over ``list_targets()`` x the four MLPerf-Tiny networks;
-adding a target (one declarative file + a ``register_target`` call, or an
-out-of-tree plugin) automatically subjects it to every assertion here.
+Parametrized over ``list_targets()`` x the four MLPerf-Tiny nets:
+whatever a target declares, the makespan-aware scheduler must bound the
+sequential cycle sum, the pipelined runtime must stay bit-exact with the
+sequential executor, and the overlap-aware memory plan must stay inside
+the declared capacities.
 """
 
-import dataclasses
 import math
 
+import numpy as np
 import pytest
 
-from repro.core import Interconnect, MappedGraph, dispatch
-from repro.targets import get_target
+import jax.numpy as jnp
+
+from repro.backend import lower
+from repro.core import dispatch
+from repro.pipeline import PipelinedModel, schedule_pipeline
 
 from .harness import BUDGET, NETS, TARGETS, compiled_for, graph_for, io_for, mapped_for
 
@@ -19,122 +24,184 @@ pytestmark = pytest.mark.parametrize("tname", TARGETS)
 
 
 # ---------------------------------------------------------------------------
-# Dispatch: valid covers
+# Scheduler: makespan bounds and degenerate exactness
 # ---------------------------------------------------------------------------
 
 
 @pytest.mark.parametrize("net", NETS)
-def test_dispatch_covers_graph_exactly_once(net, tname):
+def test_makespan_bounded_by_sequential_total(net, tname):
+    mg = mapped_for(net, tname)
+    ps = schedule_pipeline(mg)
+    ps.validate()  # deps respected, per-module lanes never overlap
+    total = mg.total_cycles()
+    assert 0.0 < ps.makespan <= total + 1e-6
+    assert math.isfinite(ps.makespan)
+    # the schedule is a complete relayout of the same work
+    assert len(ps.entries) == len(mg.segments)
+    assert ps.sequential_cycles() == pytest.approx(total)
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_makespan_equals_total_on_single_module_cover(net, tname):
+    """CPU-only restriction => one module => the schedule serialises and
+    the makespan reproduces total_cycles() exactly (same float sums)."""
+    from repro.targets import get_target
+
+    solo = get_target(tname).restricted([])
+    mg = dispatch(graph_for(net), solo, budget=BUDGET)
+    assert len({s.module for s in mg.segments}) == 1
+    ps = schedule_pipeline(mg)
+    assert ps.makespan == mg.total_cycles()
+    assert ps.speedup() == pytest.approx(1.0)
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_timeline_dict_is_consistent(net, tname):
+    ps = schedule_pipeline(mapped_for(net, tname))
+    td = ps.timeline_dict()
+    assert td["makespan_cycles"] == ps.makespan
+    lanes = td["modules"]
+    assert sum(len(m["segments"]) for m in lanes.values()) == len(ps.entries)
+    for m, lane in lanes.items():
+        assert 0.0 <= lane["occupancy"] <= 1.0 + 1e-9
+        for seg in lane["segments"]:
+            assert seg["module"] == m
+            assert seg["finish"] >= seg["start"]
+    assert td["critical_path"], "critical path must be non-empty"
+
+
+# ---------------------------------------------------------------------------
+# Dispatch objective="makespan"
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_makespan_objective_never_worse(net, tname):
+    """Re-ranking by makespan can only improve (or tie) the scheduled
+    makespan vs the cycles-optimal mapping, and must still cover the
+    graph exactly."""
     g = graph_for(net)
-    mg = mapped_for(net, tname)
-    covered = [n.name for s in mg.segments for n in s.nodes]
-    assert sorted(covered) == sorted(n.name for n in g.nodes)
-    assert len(covered) == len(set(covered))
-    # segments partition the topological order contiguously, land on
-    # declared modules, and carry sane cycle accounting
-    idx = {n.name: i for i, n in enumerate(g.nodes)}
-    modnames = {m.name for m in mg.target.all_modules()}
-    pos = 0
-    for s in mg.segments:
-        for nd in s.nodes:
-            assert idx[nd.name] == pos, (s.anchor.name, nd.name)
-            pos += 1
-        assert s.module in modnames
-        assert s.cycles >= 0.0 and math.isfinite(s.cycles)
-        assert s.transfer_cycles >= 0.0 and math.isfinite(s.transfer_cycles)
+    by_cycles = mapped_for(net, tname)
+    by_makespan = dispatch(g, tname, budget=BUDGET, objective="makespan")
+    covered = sorted(n.name for s in by_makespan.segments for n in s.nodes)
+    assert covered == sorted(n.name for n in g.nodes)
+    ms_c = schedule_pipeline(by_cycles).makespan
+    ms_m = schedule_pipeline(by_makespan).makespan
+    assert ms_m <= ms_c + 1e-6
+    assert by_makespan.attrs["objective"] == "makespan"
+    assert by_makespan.attrs["predicted_makespan"] == pytest.approx(ms_m)
+    assert by_makespan.attrs["candidates_reranked"] >= 1
 
 
-@pytest.mark.parametrize("net", NETS)
-def test_dispatch_segments_match_module_pattern_tables(net, tname):
-    """A multi-node segment must be a pattern its module actually declares
-    (the fallback and structural segments are single nodes)."""
-    mg = mapped_for(net, tname)
-    for s in mg.segments:
-        if s.pattern in ("fallback", "structural"):
-            assert len(s.nodes) == 1
-            continue
-        module = mg.target.module(s.module)
-        names = {p.name for p in module.patterns}
-        assert s.pattern in names, (s.module, s.pattern)
-        ops = tuple(n.op for n in s.nodes)
-        pat = next(p for p in module.patterns if p.name == s.pattern)
-        assert ops == pat.ops
+def test_skipless_chain_ties_under_both_objectives(tname):
+    """The DAE autoencoder is a pure chain: no overlap exists, so the
+    makespan objective must reproduce the cycles objective's cost."""
+    g = graph_for("DAE")
+    a = dispatch(g, tname, budget=BUDGET)
+    b = dispatch(g, tname, budget=BUDGET, objective="makespan")
+    assert b.total_cycles() == pytest.approx(a.total_cycles())
+    assert schedule_pipeline(b).makespan == pytest.approx(
+        schedule_pipeline(a).makespan
+    )
 
 
 # ---------------------------------------------------------------------------
-# Backend: bit-exact compiled execution
+# Pipelined runtime: bit-exactness
 # ---------------------------------------------------------------------------
 
 
 @pytest.mark.parametrize("net", NETS)
-def test_compiled_bit_exact_with_interpreter(net, tname):
+def test_pipelined_run_bit_exact(net, tname):
     cm = compiled_for(net, tname)
     params, x = io_for(net)
+    pm = PipelinedModel(cm)
+    assert pm.verify(params, x) == 0.0
+    # and against the interpreter through the sequential contract
     assert cm.verify(params, x) == 0.0
 
 
 @pytest.mark.parametrize("net", NETS)
-def test_every_graph_output_reachable(net, tname):
+def test_run_stream_bit_exact_and_ordered(net, tname):
     cm = compiled_for(net, tname)
-    produced = {ls.output_name for ls in cm.segments}
-    assert set(cm.graph.outputs) <= produced
-    assert cm.fused_node_count() == len(cm.graph.nodes)
+    params, _ = io_for(net)
+    g = cm.graph
+    rng = np.random.default_rng(7)
+    xs = [
+        {k: rng.integers(-128, 128, s).astype("float32") for k, s in g.inputs.items()}
+        for _ in range(3)
+    ]
+    pm = PipelinedModel(cm, stream_depth=2)
+    outs = pm.run_stream(params, xs)
+    assert len(outs) == len(xs)
+    for x, out in zip(xs, outs):
+        ref = cm.run(params, x)
+        for k in ref:
+            assert float(jnp.max(jnp.abs(ref[k] - out[k]))) == 0.0
 
 
 # ---------------------------------------------------------------------------
-# Memory plan: offsets disjoint, capacities respected
+# Memory under overlap
 # ---------------------------------------------------------------------------
 
 
 @pytest.mark.parametrize("net", NETS)
-def test_memory_plan_within_every_capacity(net, tname):
-    plan = compiled_for(net, tname).memory_plan
-    plan.validate()  # must not raise
-    for lvl, used in plan.arena_bytes.items():
-        assert used <= plan.capacities[lvl], (lvl, used, plan.capacities[lvl])
+def test_pipeline_memory_plan_sound(net, tname):
+    from repro.backend import plan_memory
 
-
-@pytest.mark.parametrize("net", NETS)
-def test_memory_plan_offsets_non_overlapping(net, tname):
-    plan = compiled_for(net, tname).memory_plan
+    cm = compiled_for(net, tname)
+    ps = schedule_pipeline(cm.mapped)
+    plan = plan_memory(cm.mapped, schedule=ps)
+    plan.validate()  # capacities respected under concurrent liveness
     assert plan.check_no_overlap()
-    for b in plan.buffers.values():
-        assert b.offset >= 0
-        assert b.nbytes >= 1
-        assert b.start < b.end
+    assert plan.attrs["pipeline"] is True
+    # two concurrently-scheduled segments' outputs must not share bytes
+    overlapping = [
+        (a, b)
+        for a in ps.entries
+        for b in ps.entries
+        if a.index < b.index and a.start < b.finish and b.start < a.finish
+    ]
+    bufs = plan.buffers
+    for a, b in overlapping:
+        seg_a = cm.mapped.segments[a.index].output_node.name
+        seg_b = cm.mapped.segments[b.index].output_node.name
+        if seg_a in bufs and seg_b in bufs:
+            assert not (
+                bufs[seg_a].overlaps_time(bufs[seg_b])
+                and bufs[seg_a].overlaps_space(bufs[seg_b])
+            )
+
+
+@pytest.mark.parametrize("net", ["ResNet"])
+def test_stream_depth_reserves_queue_copies(net, tname):
+    from repro.backend import plan_memory
+
+    cm = compiled_for(net, tname)
+    ps = schedule_pipeline(cm.mapped)
+    p1 = plan_memory(cm.mapped, schedule=ps, stream_depth=1)
+    p2 = plan_memory(cm.mapped, schedule=ps, stream_depth=2)
+    assert len(p2.buffers) == 2 * len(p1.buffers)
+    assert any(name.endswith("@q1") for name in p2.buffers)
+    assert p2.arena_bytes[p2.home_level] >= p1.arena_bytes[p1.home_level]
+    p2.validate()
 
 
 # ---------------------------------------------------------------------------
-# Cycle accounting: monotone under added transfer edges
+# Schedule cache: the makespan objective changes no DSE queries
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("net", NETS)
-def test_total_cycles_monotone_under_added_transfer_edges(net, tname):
-    mg = mapped_for(net, tname)
-    base = mg.total_cycles()
-    assert base > 0.0 and math.isfinite(base)
-    assert base == pytest.approx(mg.compute_cycles() + mg.transfer_cycles())
-    # charging one more transfer edge on any segment raises the total by
-    # exactly that edge's cycles — never less, never reshuffled away
-    for i in (0, len(mg.segments) // 2, len(mg.segments) - 1):
-        seg = mg.segments[i]
-        bumped = dataclasses.replace(seg, transfer_cycles=seg.transfer_cycles + 1234.0)
-        segments = [bumped if j == i else s for j, s in enumerate(mg.segments)]
-        mg2 = MappedGraph(mg.graph, mg.target, segments)
-        assert mg2.total_cycles() == pytest.approx(base + 1234.0)
+def test_warm_cache_roundtrip_with_makespan_objective(tname, tmp_path):
+    from repro.core import SchedulePlanner
 
-
-@pytest.mark.parametrize("net", NETS)
-def test_dispatch_cost_monotone_in_transfer_prices(net, tname):
-    """Raising every cross-module transfer price can never make the
-    chosen mapping cheaper (the DP prices transfers, so a pointwise-more-
-    expensive interconnect bounds the optimum from below)."""
-    mg = mapped_for(net, tname)
-    pricey = get_target(tname)
-    ic = pricey.interconnect
-    pricey.interconnect = Interconnect(
-        bandwidth=ic.bandwidth, hop_latency=ic.hop_latency * 10.0 + 1000.0
-    )
-    mg2 = dispatch(graph_for(net), pricey, budget=BUDGET)
-    assert mg2.total_cycles() >= mg.total_cycles() - 1e-6
+    g = graph_for("DSCNN")
+    cache = tmp_path / "sched.json"
+    cold_planner = SchedulePlanner(cache_path=cache)
+    cold = dispatch(g, tname, budget=BUDGET, objective="makespan", planner=cold_planner)
+    warm_planner = SchedulePlanner(cache_path=cache)
+    warm = dispatch(g, tname, budget=BUDGET, objective="makespan", planner=warm_planner)
+    assert [
+        (s.anchor.name, s.module, len(s.nodes)) for s in cold.segments
+    ] == [(s.anchor.name, s.module, len(s.nodes)) for s in warm.segments]
+    assert warm.total_cycles() == pytest.approx(cold.total_cycles())
+    assert warm_planner.stats.get("disk_hits", 0) > 0

@@ -1,0 +1,54 @@
+"""CompiledModel.report_dict() is the machine-readable contract CI and
+the calibration fitter consume: it must stay JSON-serializable on every
+registered target, round-trip losslessly, and carry the pipeline
+timeline payload (PR 5)."""
+
+import json
+
+import pytest
+
+from .harness import NETS, TARGETS, compiled_for, io_for
+
+pytestmark = pytest.mark.parametrize("tname", TARGETS)
+
+# one net keeps the matrix cheap; the payload shape is net-independent
+NET = "DSCNN"
+
+
+def test_report_dict_json_roundtrip(tname):
+    cm = compiled_for(NET, tname)
+    d = cm.report_dict()
+    back = json.loads(json.dumps(d, sort_keys=True))
+    assert back == json.loads(json.dumps(back, sort_keys=True))  # stable
+    assert back["graph"] == cm.graph.name
+    assert back["target"] == cm.target.name
+    assert len(back["segments"]) == len(cm.segments)
+    assert back["predicted_total_cycles"] == pytest.approx(cm.predicted_cycles())
+    assert back["memory_plan"]["fits"] in (True, False)
+
+
+def test_report_dict_carries_pipeline_timeline(tname):
+    cm = compiled_for(NET, tname)
+    d = json.loads(json.dumps(cm.report_dict()))
+    tl = d["pipeline"]
+    assert tl["graph"] == cm.graph.name
+    assert 0.0 < tl["makespan_cycles"] <= tl["sequential_cycles"] + 1e-6
+    assert tl["speedup"] >= 1.0 - 1e-9
+    n_scheduled = sum(len(m["segments"]) for m in tl["modules"].values())
+    assert n_scheduled == len(cm.segments)
+    for m, lane in tl["modules"].items():
+        for seg in lane["segments"]:
+            assert set(seg) >= {"name", "module", "start", "finish"}
+            assert seg["module"] == m
+
+
+def test_report_dict_roundtrips_with_measured_timings(tname):
+    cm = compiled_for(NET, tname)
+    params, x = io_for(NET)
+    cm.run(params, x, timed=True)
+    d = cm.report_dict()
+    back = json.loads(json.dumps(d, sort_keys=True))
+    assert "timings" in back and len(back["timings"]) >= 1
+    for row in back["timings"]:
+        assert row["frequency_hz"] > 0.0
+        assert row["measured_cycles"] >= 0.0

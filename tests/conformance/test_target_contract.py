@@ -1,0 +1,140 @@
+"""The compile-pipeline contract every registered target must satisfy.
+
+Parametrized over ``list_targets()`` x the four MLPerf-Tiny networks;
+adding a target (one declarative file + a ``register_target`` call, or an
+out-of-tree plugin) automatically subjects it to every assertion here.
+"""
+
+import dataclasses
+import math
+
+import pytest
+
+from repro.core import Interconnect, MappedGraph, dispatch
+from repro.targets import get_target
+
+from .harness import BUDGET, NETS, TARGETS, compiled_for, graph_for, io_for, mapped_for
+
+pytestmark = pytest.mark.parametrize("tname", TARGETS)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: valid covers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_dispatch_covers_graph_exactly_once(net, tname):
+    g = graph_for(net)
+    mg = mapped_for(net, tname)
+    covered = [n.name for s in mg.segments for n in s.nodes]
+    assert sorted(covered) == sorted(n.name for n in g.nodes)
+    assert len(covered) == len(set(covered))
+    # segments partition the topological order contiguously, land on
+    # declared modules, and carry sane cycle accounting
+    idx = {n.name: i for i, n in enumerate(g.nodes)}
+    modnames = {m.name for m in mg.target.all_modules()}
+    pos = 0
+    for s in mg.segments:
+        for nd in s.nodes:
+            assert idx[nd.name] == pos, (s.anchor.name, nd.name)
+            pos += 1
+        assert s.module in modnames
+        assert s.cycles >= 0.0 and math.isfinite(s.cycles)
+        assert s.transfer_cycles >= 0.0 and math.isfinite(s.transfer_cycles)
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_dispatch_segments_match_module_pattern_tables(net, tname):
+    """A multi-node segment must be a pattern its module actually declares
+    (the fallback and structural segments are single nodes)."""
+    mg = mapped_for(net, tname)
+    for s in mg.segments:
+        if s.pattern in ("fallback", "structural"):
+            assert len(s.nodes) == 1
+            continue
+        module = mg.target.module(s.module)
+        names = {p.name for p in module.patterns}
+        assert s.pattern in names, (s.module, s.pattern)
+        ops = tuple(n.op for n in s.nodes)
+        pat = next(p for p in module.patterns if p.name == s.pattern)
+        assert ops == pat.ops
+
+
+# ---------------------------------------------------------------------------
+# Backend: bit-exact compiled execution
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_compiled_bit_exact_with_interpreter(net, tname):
+    cm = compiled_for(net, tname)
+    params, x = io_for(net)
+    assert cm.verify(params, x) == 0.0
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_every_graph_output_reachable(net, tname):
+    cm = compiled_for(net, tname)
+    produced = {ls.output_name for ls in cm.segments}
+    assert set(cm.graph.outputs) <= produced
+    assert cm.fused_node_count() == len(cm.graph.nodes)
+
+
+# ---------------------------------------------------------------------------
+# Memory plan: offsets disjoint, capacities respected
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_memory_plan_within_every_capacity(net, tname):
+    plan = compiled_for(net, tname).memory_plan
+    plan.validate()  # must not raise
+    for lvl, used in plan.arena_bytes.items():
+        assert used <= plan.capacities[lvl], (lvl, used, plan.capacities[lvl])
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_memory_plan_offsets_non_overlapping(net, tname):
+    plan = compiled_for(net, tname).memory_plan
+    assert plan.check_no_overlap()
+    for b in plan.buffers.values():
+        assert b.offset >= 0
+        assert b.nbytes >= 1
+        assert b.start < b.end
+
+
+# ---------------------------------------------------------------------------
+# Cycle accounting: monotone under added transfer edges
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_total_cycles_monotone_under_added_transfer_edges(net, tname):
+    mg = mapped_for(net, tname)
+    base = mg.total_cycles()
+    assert base > 0.0 and math.isfinite(base)
+    assert base == pytest.approx(mg.compute_cycles() + mg.transfer_cycles())
+    # charging one more transfer edge on any segment raises the total by
+    # exactly that edge's cycles — never less, never reshuffled away
+    for i in (0, len(mg.segments) // 2, len(mg.segments) - 1):
+        seg = mg.segments[i]
+        bumped = dataclasses.replace(seg, transfer_cycles=seg.transfer_cycles + 1234.0)
+        segments = [bumped if j == i else s for j, s in enumerate(mg.segments)]
+        mg2 = MappedGraph(mg.graph, mg.target, segments)
+        assert mg2.total_cycles() == pytest.approx(base + 1234.0)
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_dispatch_cost_monotone_in_transfer_prices(net, tname):
+    """Raising every cross-module transfer price can never make the
+    chosen mapping cheaper (the DP prices transfers, so a pointwise-more-
+    expensive interconnect bounds the optimum from below)."""
+    mg = mapped_for(net, tname)
+    pricey = get_target(tname)
+    ic = pricey.interconnect
+    pricey.interconnect = Interconnect(
+        bandwidth=ic.bandwidth, hop_latency=ic.hop_latency * 10.0 + 1000.0
+    )
+    mg2 = dispatch(graph_for(net), pricey, budget=BUDGET)
+    assert mg2.total_cycles() >= mg.total_cycles() - 1e-6

@@ -1,0 +1,499 @@
+"""Unit tests for repro.pipeline: scheduler math on hand-built mapped
+graphs (exact expected times), schedule validation, pipeline-aware
+memory liveness, the dispatch objective plumbing, and the satellite
+fixes (frequency warnings, per-segment divergence localization)."""
+
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ComputeModel,
+    CostBreakdown,
+    ExecutionModule,
+    Graph,
+    MappedGraph,
+    MappedSegment,
+    MatchTarget,
+    MemoryLevel,
+    Node,
+    ScheduleResult,
+    TemporalMapping,
+    dispatch,
+)
+from repro.pipeline import (
+    PipelineScheduleError,
+    ScheduledSegment,
+    PipelineSchedule,
+    schedule_pipeline,
+    segment_deps,
+)
+
+
+# ---------------------------------------------------------------------------
+# Hand-built fixtures: a diamond graph, two modules, explicit cycles
+# ---------------------------------------------------------------------------
+
+
+def _module(name: str) -> ExecutionModule:
+    return ExecutionModule(
+        name=name,
+        memories=(MemoryLevel("L2", 1 << 20, 8.0),),
+        spatial={},
+        compute=ComputeModel(),
+    )
+
+
+def _target() -> MatchTarget:
+    return MatchTarget(
+        name="toy", modules=[_module("acc")], fallback=_module("cpu")
+    )
+
+
+def _sched(cycles: float) -> ScheduleResult:
+    cost = CostBreakdown(True, cycles, cycles, 0.0, {}, {}, 1.0)
+    return ScheduleResult("w", "m", TemporalMapping({}, ()), cost, 1)
+
+
+def _seg(node: Node, module: str, cycles: float, xfer: float = 0.0) -> MappedSegment:
+    return MappedSegment(
+        (node,), module, _sched(cycles), None, pattern="fallback", transfer_cycles=xfer
+    )
+
+
+def _diamond() -> Graph:
+    geom = {"B": 1, "K": 1, "C": 1, "OY": 1, "OX": 1, "elem_bytes": 1}
+    nodes = [
+        Node("a", "conv2d", ("x",), dict(geom)),
+        Node("b", "conv2d", ("a",), dict(geom)),
+        Node("c", "conv2d", ("a",), dict(geom)),
+        Node("d", "add", ("b", "c"), dict(geom)),
+    ]
+    return Graph("diamond", nodes, {"x": (1, 1, 1, 1)}, ("d",))
+
+
+def _diamond_mapped(xfer_c: float = 0.0, xfer_d: float = 0.0) -> MappedGraph:
+    g = _diamond()
+    segs = [
+        _seg(g.node("a"), "cpu", 10.0),
+        _seg(g.node("b"), "cpu", 6.0),
+        _seg(g.node("c"), "acc", 4.0, xfer=xfer_c),
+        _seg(g.node("d"), "cpu", 2.0, xfer=xfer_d),
+    ]
+    return MappedGraph(g, _target(), segs)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler math
+# ---------------------------------------------------------------------------
+
+
+def test_segment_deps_diamond():
+    mg = _diamond_mapped()
+    assert segment_deps(mg) == [(), (0,), (0,), (1, 2)]
+
+
+def test_diamond_overlaps_branches_exactly():
+    mg = _diamond_mapped()
+    ps = schedule_pipeline(mg)
+    ps.validate()
+    # a: 0-10 cpu; b: 10-16 cpu; c: 10-14 acc (overlaps b); d: 16-18 cpu
+    assert [e.start for e in ps.entries] == [0.0, 10.0, 10.0, 16.0]
+    assert [e.finish for e in ps.entries] == [10.0, 16.0, 14.0, 18.0]
+    assert ps.makespan == 18.0
+    assert mg.total_cycles() == 22.0  # 4 cycles of overlap won
+    assert ps.speedup() == pytest.approx(22.0 / 18.0)
+    assert ps.critical_path() == [0, 1, 3]
+
+
+def test_transfer_serialises_on_consumer_module():
+    # the cross-module edge into c delays only c; the transfer cycles are
+    # charged at the head of c's slot on its own module
+    ps = schedule_pipeline(_diamond_mapped(xfer_c=3.0))
+    c = ps.entries[2]
+    assert (c.start, c.finish) == (10.0, 17.0)
+    assert c.transfer_cycles == 3.0
+    d = ps.entries[3]
+    assert d.start == 17.0  # now blocked by c, not b
+    assert ps.critical_path() == [0, 2, 3]
+
+
+def test_single_module_reproduces_total_cycles_exactly():
+    g = _diamond()
+    segs = [
+        _seg(g.node("a"), "cpu", 10.0),
+        _seg(g.node("b"), "cpu", 6.0),
+        _seg(g.node("c"), "cpu", 4.0),
+        _seg(g.node("d"), "cpu", 2.0),
+    ]
+    mg = MappedGraph(g, _target(), segs)
+    ps = schedule_pipeline(mg)
+    assert ps.makespan == mg.total_cycles() == 22.0
+    assert ps.occupancy()["cpu"] == pytest.approx(1.0)
+
+
+def test_empty_graph_schedules_to_zero():
+    g = Graph("empty", [], {}, ())
+    ps = schedule_pipeline(MappedGraph(g, _target(), []))
+    assert ps.makespan == 0.0
+    assert ps.entries == [] and ps.critical_path() == []
+
+
+def test_validate_rejects_dependency_violation():
+    ps = PipelineSchedule(
+        graph_name="g",
+        target_name="t",
+        entries=[
+            ScheduledSegment(0, "a", "cpu", 0.0, 0.0, 10.0, 10.0, ()),
+            ScheduledSegment(1, "b", "acc", 5.0, 0.0, 1.0, 6.0, (0,)),
+        ],
+        makespan=10.0,
+    )
+    with pytest.raises(PipelineScheduleError, match="before its"):
+        ps.validate()
+
+
+def test_validate_rejects_module_overlap():
+    ps = PipelineSchedule(
+        graph_name="g",
+        target_name="t",
+        entries=[
+            ScheduledSegment(0, "a", "cpu", 0.0, 0.0, 10.0, 10.0, ()),
+            ScheduledSegment(1, "b", "cpu", 5.0, 0.0, 10.0, 15.0, ()),
+        ],
+        makespan=15.0,
+    )
+    with pytest.raises(PipelineScheduleError, match="overlap"):
+        ps.validate()
+
+
+def test_timeline_and_gantt_render():
+    ps = schedule_pipeline(_diamond_mapped())
+    td = ps.timeline_dict()
+    assert td["makespan_cycles"] == 18.0
+    assert set(td["modules"]) == {"cpu", "acc"}
+    assert "cpu" in ps.gantt() and "#" in ps.gantt()
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-aware memory liveness
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_buffers_conflict_in_pipeline_plan():
+    from repro.backend import plan_memory
+
+    mg = _diamond_mapped()
+    ps = schedule_pipeline(mg)
+    plan = plan_memory(mg, schedule=ps)
+    # b (10-16) and c (10-14) run concurrently: their outputs must not
+    # share arena bytes
+    b, c = plan.buffers["b"], plan.buffers["c"]
+    assert b.overlaps_time(c)
+    assert not b.overlaps_space(c)
+    assert plan.check_no_overlap()
+    assert plan.attrs["pipeline"] is True
+    assert plan.attrs["makespan_cycles"] == 18.0
+
+
+def test_stream_depth_requires_schedule():
+    from repro.backend import plan_memory
+
+    with pytest.raises(ValueError, match="pipeline schedule"):
+        plan_memory(_diamond_mapped(), stream_depth=2)
+    with pytest.raises(ValueError, match=">= 1"):
+        plan_memory(_diamond_mapped(), stream_depth=0)
+
+
+def _shared_l1_mapped(l1_bytes: int) -> MappedGraph:
+    """Two modules sharing one L1 level (gap9's cluster+NE16 shape), with
+    dense workloads whose single-tile working sets are ~C bytes each, and
+    a schedule that overlaps segments b (m1) and c (m2)."""
+    from repro.core import dense_workload
+
+    shared_l1 = MemoryLevel("L1", l1_bytes, 8.0)
+    home = MemoryLevel("L2", 1 << 22, 8.0)
+
+    def module(name: str) -> ExecutionModule:
+        return ExecutionModule(
+            name=name,
+            memories=(shared_l1, home),
+            spatial={},
+            compute=ComputeModel(),
+        )
+
+    target = MatchTarget(
+        name="shared", modules=[module("m1"), module("m2")], fallback=module("cpu")
+    )
+    g = _diamond()
+
+    def seg(node: Node, mod: str, cycles: float, C: int) -> MappedSegment:
+        wl = dense_workload(name=f"wl_{node.name}", K=4, C=C)
+        tiles = {"B": 1, "K": 4, "C": C}  # whole workload resident
+        cost = CostBreakdown(True, cycles, cycles, 0.0, {}, {}, 1.0)
+        sched = ScheduleResult(wl.name, mod, TemporalMapping(tiles, ("B", "K", "C")), cost, 1)
+        return MappedSegment((node,), mod, sched, wl, pattern="fallback")
+
+    segs = [
+        seg(g.node("a"), "cpu", 10.0, 64),
+        seg(g.node("b"), "m1", 6.0, 1000),
+        seg(g.node("c"), "m2", 4.0, 1200),
+        seg(g.node("d"), "cpu", 2.0, 64),
+    ]
+    return MappedGraph(g, target, segs)
+
+
+def test_concurrent_shared_l1_working_sets_sum():
+    """b and c overlap on the schedule and share the L1 level name: the
+    pipeline plan must account their working sets SUMMED, not maxed."""
+    from repro.backend import plan_memory
+
+    mg = _shared_l1_mapped(1 << 20)  # plenty of room: no spills
+    ps = schedule_pipeline(mg)
+    seq = plan_memory(mg)
+    pipe = plan_memory(mg, schedule=ps)
+    assert not pipe.spills
+    # sequential: max of the two; concurrent: their sum
+    assert pipe.arena_bytes["L1"] > seq.arena_bytes["L1"]
+    assert pipe.arena_bytes["L1"] == (
+        pipe.l1_by_segment[1]["L1"] + pipe.l1_by_segment[2]["L1"]
+    )
+
+
+def test_concurrent_shared_l1_overflow_spills_largest():
+    """When the summed concurrent working sets overflow the shared L1,
+    the largest contributor spills (streams from home) and the plan
+    still validates; allow_spill=False raises instead."""
+    from repro.backend import MemoryPlanError, plan_memory
+
+    mg = _shared_l1_mapped(10_000)  # fits either segment alone, not both
+    ps = schedule_pipeline(mg)
+    plan_memory(mg).validate()  # sequential execution is fine
+    pipe = plan_memory(mg, schedule=ps)
+    pipe.validate()
+    assert "c" in pipe.spills  # c has the larger working set
+    assert pipe.arena_bytes["L1"] <= 10_000
+    with pytest.raises(MemoryPlanError, match="concurrent working sets"):
+        plan_memory(mg, schedule=ps, allow_spill=False)
+
+
+def test_aliasing_follows_happens_before_not_predicted_times():
+    """Two segments with no dependency path and no shared module may
+    execute concurrently REGARDLESS of their predicted slots — their
+    buffers must never alias, even when the schedule times are disjoint."""
+    from repro.backend import plan_memory
+
+    geom = {"B": 1, "K": 1, "C": 1, "OY": 1, "OX": 1, "elem_bytes": 1}
+    # two independent chains: x->a->b (m1), y->c->d (m2); the scheduler
+    # predicts m2's short chain long done before m1's tail, but the
+    # runtime gives no such guarantee
+    nodes = [
+        Node("a", "conv2d", ("x",), dict(geom)),
+        Node("c", "conv2d", ("y",), dict(geom)),
+        Node("d", "conv2d", ("c",), dict(geom)),
+        Node("b", "conv2d", ("a",), dict(geom)),
+    ]
+    g = Graph("indep", nodes, {"x": (1,), "y": (1,)}, ("b", "d"))
+    segs = [
+        _seg(g.node("a"), "m1", 100.0),
+        _seg(g.node("c"), "m2", 1.0),
+        _seg(g.node("d"), "m2", 1.0),
+        _seg(g.node("b"), "m1", 100.0),
+    ]
+    target = MatchTarget(
+        name="toy2", modules=[_module("m1"), _module("m2")], fallback=_module("cpu")
+    )
+    mg = MappedGraph(g, target, segs)
+    ps = schedule_pipeline(mg)
+    # predicted: c dies at t=2 (d's finish), long before b's slot [100, 200)
+    assert ps.entries[2].finish < ps.entries[3].start
+    plan = plan_memory(mg, schedule=ps)
+    # but at runtime d (m2) may still be reading c while b (m1) writes —
+    # nothing orders them — so c and b must not share bytes even though
+    # their predicted intervals are disjoint
+    c, b = plan.buffers["c"], plan.buffers["b"]
+    assert not c.overlaps_time(b)  # predicted intervals ARE disjoint...
+    assert not c.overlaps_space(b), "time-disjoint but unordered buffers aliased"
+    # and unordered cross-module pairs that are both live-to-the-end
+    a, d = plan.buffers["a"], plan.buffers["d"]
+    assert not a.overlaps_space(d)
+
+
+def test_streaming_bound_sums_per_module_maxima():
+    """stream_depth > 1: any (one segment per module) combination can
+    coincide across in-flight inputs — the bound is the per-module-max
+    sum even when the single-input schedule never overlaps them."""
+    from repro.backend import plan_memory
+
+    mg = _shared_l1_mapped(1 << 20)
+    # serialise b and c by making them a chain on the graph? simpler:
+    # the depth>1 bound must be >= the single-input sweep regardless
+    ps = schedule_pipeline(mg)
+    p1 = plan_memory(mg, schedule=ps, stream_depth=1)
+    p2 = plan_memory(mg, schedule=ps, stream_depth=2)
+    assert p2.arena_bytes["L1"] >= p1.arena_bytes["L1"]
+    # cpu runs a (C=64) and d (C=64): its max joins the sum once
+    m1 = p2.l1_by_segment[1]["L1"]
+    m2 = p2.l1_by_segment[2]["L1"]
+    cpu = max(p2.l1_by_segment[0]["L1"], p2.l1_by_segment[3]["L1"])
+    assert p2.arena_bytes["L1"] == m1 + m2 + cpu
+
+
+# ---------------------------------------------------------------------------
+# Dispatch objective plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_rejects_unknown_objective():
+    g = _diamond()
+    with pytest.raises(ValueError, match="objective"):
+        dispatch(g, _target(), objective="latency")
+
+
+def test_greedy_policy_rejects_makespan():
+    g = _diamond()
+    with pytest.raises(ValueError, match="greedy"):
+        dispatch(g, _target(), policy="greedy", objective="makespan")
+
+
+def test_makespan_objective_prefers_overlap_on_synthetic_branch():
+    """gap9's cluster + NE16: a residual pair of convs must schedule with
+    makespan <= the cycle sum, and the makespan objective can never rank
+    worse than the cycles objective under the scheduler."""
+    from repro.targets import get_target
+
+    geom = dict(B=1, K=8, C=8, OY=8, OX=8, FY=3, FX=3, stride=1, elem_bytes=1)
+    nodes = [
+        Node("a", "conv2d", ("x",), dict(geom)),
+        Node("b", "conv2d", ("a",), dict(geom)),
+        Node("c", "conv2d", ("a",), dict(geom)),
+        Node("d", "add", ("b", "c"), dict(geom)),
+    ]
+    g = Graph("branchy", nodes, {"x": (1, 8, 8, 8)}, ("d",))
+    t = get_target("gap9")
+    by_cycles = dispatch(g, t, budget=200)
+    by_makespan = dispatch(g, t, budget=200, objective="makespan")
+    ms_c = schedule_pipeline(by_cycles).makespan
+    ms_m = schedule_pipeline(by_makespan).makespan
+    assert ms_m <= ms_c + 1e-6
+    assert ms_m <= by_makespan.total_cycles() + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Satellites: frequency guards + divergence localization
+# ---------------------------------------------------------------------------
+
+
+def test_segment_timing_warns_on_unset_frequency():
+    from repro.backend import SegmentTiming, UnsetFrequencyWarning
+
+    tm = SegmentTiming("s", "cpu", "reference", 100.0, 5.0)  # frequency unset
+    with pytest.warns(UnsetFrequencyWarning, match="poison"):
+        assert tm.measured_cycles == 0.0
+    ok = SegmentTiming("s", "cpu", "reference", 100.0, 5.0, frequency_hz=2e8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert ok.measured_cycles == pytest.approx(1000.0)
+
+
+def test_microbench_sample_raises_on_unset_frequency():
+    from repro.calibrate.microbench import MicrobenchSample
+
+    s = MicrobenchSample(
+        graph="g", segment="s", module="m", pattern="p", route="r",
+        l_ops=1.0, l_mem=1.0, async_dma=False, predicted_cycles=1.0,
+        measured_us=5.0, frequency_hz=0.0,
+    )
+    with pytest.raises(ValueError, match="poison"):
+        s.measured_cycles
+    ok = MicrobenchSample(
+        graph="g", segment="s", module="m", pattern="p", route="r",
+        l_ops=1.0, l_mem=1.0, async_dma=False, predicted_cycles=1.0,
+        measured_us=5.0, frequency_hz=2e8,
+    )
+    assert ok.measured_cycles == pytest.approx(1000.0)
+
+
+def _small_compiled():
+    from repro.backend import lower
+    from repro.cnn import conv_block_graph, init_graph_params
+
+    g = conv_block_graph(IX=8, IY=8, C=4, K=8)
+    mapped = dispatch(g, "gap9", budget=150)
+    cm = lower(mapped)
+    params = init_graph_params(g)
+    x = {
+        k: np.random.default_rng(0).integers(-128, 128, s).astype("float32")
+        for k, s in g.inputs.items()
+    }
+    return cm, params, x
+
+
+def test_verify_per_segment_localizes_divergence():
+    cm, params, x = _small_compiled()
+    rep = cm.verify(params, x, per_segment=True)
+    assert rep.exact and rep.first_divergent is None
+    assert len(rep.segments) == len(cm.segments)
+    assert "bit-exact" in rep.summary()
+
+    # break the first segment's executor: localization must name it
+    broken = cm.segments[0]
+    orig_fn = broken.fn
+    broken.fn = lambda p, *xs: orig_fn(p, *xs) + 1.0
+    try:
+        rep2 = cm.verify(params, x, per_segment=True)
+        assert not rep2.exact
+        assert rep2.first_divergent is not None
+        assert rep2.first_divergent.name == broken.name
+        assert rep2.first_divergent.max_abs_err == pytest.approx(1.0)
+        assert broken.name in rep2.summary()
+        # the scalar path still reports the global error
+        assert cm.verify(params, x) > 0.0
+    finally:
+        broken.fn = orig_fn
+
+
+def test_pipelined_model_rejects_bad_depth():
+    from repro.pipeline import PipelinedModel
+
+    cm, _, _ = _small_compiled()
+    with pytest.raises(ValueError, match="stream_depth"):
+        PipelinedModel(cm, stream_depth=0)
+
+
+def test_run_stream_depth_bounded_by_memory_plan():
+    from repro.pipeline import PipelinedModel
+
+    cm, params, x = _small_compiled()
+    pm = PipelinedModel(cm, stream_depth=2)
+    with pytest.raises(ValueError, match="stream_depth"):
+        pm.run_stream(params, [x, x], depth=5)  # plan reserved 2 copies
+    with pytest.raises(ValueError, match="depth"):
+        pm.run_stream(params, [x], depth=0)
+    assert len(pm.run_stream(params, [x, x, x], depth=1)) == 3
+
+
+def test_pipelined_model_rejects_foreign_schedule():
+    from repro.pipeline import PipelinedModel
+
+    cm, _, _ = _small_compiled()
+    foreign = schedule_pipeline(_diamond_mapped())
+    with pytest.raises(ValueError, match="does not match"):
+        PipelinedModel(cm, foreign)
+
+
+def test_pipelined_model_propagates_segment_errors():
+    from repro.pipeline import PipelinedModel
+
+    cm, params, x = _small_compiled()
+    pm = PipelinedModel(cm)
+    broken = pm.compiled.segments[0]
+    orig_fn = broken.fn
+    broken.fn = lambda p, *xs: (_ for _ in ()).throw(RuntimeError("kernel exploded"))
+    try:
+        with pytest.raises(RuntimeError, match="kernel exploded"):
+            pm.run(params, x)
+    finally:
+        broken.fn = orig_fn
