@@ -9,6 +9,14 @@ For each MLPerf-Tiny network on GAP9:
   per-op interpreter,
 * record the memory-plan arena numbers.
 
+With ``aot=True`` (``--aot``) each net additionally goes through
+:func:`repro.backend.compile_aot`: the whole graph fused into ONE jitted
+executable with zero per-segment host dispatch.  The AOT path is golden-
+checked bit-exact against the per-segment run, timed the same way, and
+the benchmark *raises* unless AOT beats the per-segment fused path on at
+least one net (and reports how many pairs clear 2x — the PR 6 acceptance
+bar wants >= 2 across targets).
+
 Emits the usual CSV rows plus one JSON summary line (``compiled_e2e
 JSON: {...}``) and writes ``compiled_e2e.json`` for the bench trajectory.
 """
@@ -29,7 +37,11 @@ from repro.targets import get_target
 from .common import emit, target_prefix, timed
 
 
-def run(out_path: str | None = "compiled_e2e.json", target: str = "gap9") -> list[str]:
+def run(
+    out_path: str | None = "compiled_e2e.json",
+    target: str = "gap9",
+    aot: bool = False,
+) -> list[str]:
     rows = []
     summary: dict[str, dict] = {}
     tgt = get_target(target)
@@ -63,6 +75,26 @@ def run(out_path: str | None = "compiled_e2e.json", target: str = "gap9") -> lis
         _, compiled_us = timed(run_compiled, repeats=3)
         _, fused_us = timed(run_fused, repeats=3)
 
+        aot_us = None
+        aot_speedup = None
+        if aot:
+            from repro.backend import compile_aot
+
+            am = compile_aot(fused)
+            am.warmup(params, x)  # trace + XLA compile excluded from timing
+            aot_err = am.verify(params, x)
+
+            def run_aot():
+                return jax.block_until_ready(list(am.run(params, x).values()))
+
+            run_aot()
+            _, aot_us = timed(run_aot, repeats=3)
+            aot_speedup = fused_us / max(aot_us, 1e-9)
+            if aot_err != 0.0:
+                raise AssertionError(
+                    f"{name}: AOT diverged from per-segment run (err={aot_err})"
+                )
+
         plan = compiled.memory_plan
         speedup = interp_us / max(fused_us, 1e-9)
         summary[name] = {
@@ -78,19 +110,34 @@ def run(out_path: str | None = "compiled_e2e.json", target: str = "gap9") -> lis
             "arena_bytes": dict(plan.arena_bytes),
             "plan_fits": plan.fits,
         }
-        rows.append(
-            emit(
-                f"compiled_e2e_{prefix}{name}",
-                fused_us,
-                f"interp_us={interp_us:.1f};faithful_us={compiled_us:.1f};"
-                f"fused_speedup={speedup:.2f}x;bit_exact={max_err == 0.0};"
-                f"segments={len(compiled.segments)};"
-                f"arena_{plan.home_level}={plan.arena_bytes.get(plan.home_level, 0)}",
-            )
+        derived = (
+            f"interp_us={interp_us:.1f};faithful_us={compiled_us:.1f};"
+            f"fused_speedup={speedup:.2f}x;bit_exact={max_err == 0.0};"
+            f"segments={len(compiled.segments)};"
+            f"arena_{plan.home_level}={plan.arena_bytes.get(plan.home_level, 0)}"
         )
+        if aot:
+            summary[name]["aot_us"] = aot_us
+            summary[name]["aot_speedup"] = aot_speedup
+            derived += f";aot_us={aot_us:.1f};aot_speedup={aot_speedup:.2f}x"
+        rows.append(emit(f"compiled_e2e_{prefix}{name}", fused_us, derived))
         if max_err != 0.0 or not plan.fits:
             raise AssertionError(
                 f"{name}: compiled path diverged (err={max_err}) or plan overflow"
+            )
+
+    if aot:
+        beats = [n for n, s in summary.items() if s["aot_speedup"] > 1.0]
+        two_x = [n for n, s in summary.items() if s["aot_speedup"] >= 2.0]
+        print(
+            f"compiled_e2e AOT: beats per-segment on {len(beats)}/{len(summary)} "
+            f"nets, >=2x on {sorted(two_x)}",
+            flush=True,
+        )
+        if not beats:
+            raise AssertionError(
+                "AOT did not beat the per-segment fused path on any net — "
+                "whole-graph fusion regressed; check compile_aot tracing"
             )
 
     payload = json.dumps(summary, indent=2, sort_keys=True)
@@ -101,4 +148,6 @@ def run(out_path: str | None = "compiled_e2e.json", target: str = "gap9") -> lis
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+
+    run(aot="--aot" in sys.argv)

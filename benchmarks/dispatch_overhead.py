@@ -1,0 +1,147 @@
+"""Per-segment host dispatch overhead vs the whole-graph AOT executable.
+
+The microbenchmark the PR 6 tentpole is aimed at: a chain of N trivial
+relu nodes where the *work* per segment is nanoseconds, so wall-clock is
+dominated by what MATCH's generated C never pays — per-segment host
+round-trips (Python loop, dict lookups, jit call dispatch, device sync).
+For each (chain length, width) configuration:
+
+* dispatch + lower the chain (one reference-route segment per node),
+* run the per-segment ``CompiledModel.run`` loop and the one-jit
+  :class:`~repro.backend.aot.AotModel` back to back (both warmed, so
+  trace/compile time is excluded),
+* report the median per-call wall of each path, the implied host
+  dispatch overhead per segment ``(per_segment - aot) / N``, and the
+  AOT speedup.
+
+The benchmark *raises* unless AOT is faster than the per-segment loop on
+at least one configuration — that would mean whole-graph fusion stopped
+paying for itself even where dispatch overhead is the entire cost.
+
+Emits CSV rows plus a ``dispatch_overhead JSON: {...}`` line and writes
+``dispatch_overhead.json`` for the bench trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+import statistics
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.backend import compile_aot, lower
+from repro.core import Graph, Node, dispatch
+from repro.targets import get_target
+
+from .common import emit, target_prefix, timed
+
+# (segments in the chain, channel width): tiny widths make dispatch the
+# whole cost; the wider config shows overhead amortizing into real work
+CONFIGS = ((8, 64), (24, 64), (24, 4096))
+
+
+def relu_chain(n_segments: int, width: int) -> Graph:
+    """A linear chain of ``n_segments`` relu nodes on a (1, width) tensor —
+    every node becomes its own fallback-pattern segment, so the host pays
+    ``n_segments`` dispatches per input on the per-segment path."""
+    nodes = []
+    prev = "x"
+    for i in range(n_segments):
+        name = f"r{i}"
+        nodes.append(
+            Node(
+                name,
+                "relu",
+                (prev,),
+                {"B": 1, "C": width, "OY": 1, "OX": 1, "elem_bytes": 1},
+            )
+        )
+        prev = name
+    return Graph(f"relu_chain_{n_segments}x{width}", nodes, {"x": (1, width)}, (prev,))
+
+
+def _median_us(fn, repeats: int) -> float:
+    samples = []
+    for _ in range(repeats):
+        _, us = timed(fn)
+        samples.append(us)
+    return statistics.median(samples)
+
+
+def run(
+    out_path: str | None = "dispatch_overhead.json",
+    target: str = "gap9",
+    repeat: int = 7,
+) -> list[str]:
+    rows = []
+    summary: dict[str, dict] = {}
+    tgt = get_target(target)
+    prefix, out_path = target_prefix(tgt.name, out_path, "dispatch_overhead.json")
+
+    for n_segments, width in CONFIGS:
+        g = relu_chain(n_segments, width)
+        compiled = lower(dispatch(g, tgt))
+        assert len(compiled.segments) == n_segments, "chain fused unexpectedly"
+        am = compile_aot(compiled)
+        params: dict = {}
+        # inputs staged on device once, outside the timed region — a
+        # deployed runtime feeds device-resident buffers, and the ~350us
+        # host->device put would otherwise drown the dispatch signal
+        x = {
+            "x": jnp.asarray(
+                np.random.default_rng(0).normal(size=(1, width)).astype("float32")
+            )
+        }
+        am.warmup(params, x)
+        err = am.verify(params, x)
+        if err != 0.0:
+            raise AssertionError(f"{g.name}: AOT diverged (err={err})")
+
+        def run_per_segment():
+            return jax.block_until_ready(list(compiled.run(params, x).values()))
+
+        def run_aot():
+            return jax.block_until_ready(list(am.run(params, x).values()))
+
+        run_per_segment(), run_aot()  # warm both (jit compile excluded)
+        per_segment_us = _median_us(run_per_segment, repeat)
+        aot_us = _median_us(run_aot, repeat)
+        overhead_us = (per_segment_us - aot_us) / n_segments
+        speedup = per_segment_us / max(aot_us, 1e-9)
+        key = f"{n_segments}x{width}"
+        summary[key] = {
+            "segments": n_segments,
+            "width": width,
+            "per_segment_us": per_segment_us,
+            "aot_us": aot_us,
+            "dispatch_overhead_us_per_segment": overhead_us,
+            "aot_speedup": speedup,
+            "bit_exact": err == 0.0,
+        }
+        rows.append(
+            emit(
+                f"dispatch_overhead_{prefix}{key}",
+                per_segment_us,
+                f"aot_us={aot_us:.1f};overhead_per_seg_us={overhead_us:.2f};"
+                f"aot_speedup={speedup:.2f}x;bit_exact={err == 0.0}",
+            )
+        )
+
+    if not any(s["aot_speedup"] > 1.0 for s in summary.values()):
+        raise AssertionError(
+            "AOT was not faster than the per-segment loop on any chain config "
+            "— whole-graph fusion no longer eliminates dispatch overhead"
+        )
+
+    payload = json.dumps(summary, indent=2, sort_keys=True)
+    print(f"dispatch_overhead JSON: {json.dumps(summary, sort_keys=True)}", flush=True)
+    if out_path:
+        Path(out_path).write_text(payload)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

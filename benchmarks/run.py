@@ -4,13 +4,15 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig7,table3,...] [--target gap9]
                                           [--list-targets] [--json [PATH]]
-                                          [--repeat N]
+                                          [--repeat N] [--aot]
 
 ``--target`` takes any registered target name (``repro.targets.registry``,
 see ``list_targets()``) and is forwarded to every benchmark whose ``run``
 accepts one (``dispatch_scaling``, ``compiled_e2e``,
-``calibration_accuracy``) — the per-figure benches are pinned to the
-paper's published SoCs.  ``--list-targets`` prints every registered
+``calibration_accuracy``, ``dispatch_overhead``) — the per-figure benches
+are pinned to the paper's published SoCs.  ``--aot`` is forwarded to
+benches that compare the whole-graph AOT executable against the
+per-segment path (``compiled_e2e``).  ``--list-targets`` prints every registered
 target (plugins included) and exits; ``--json`` additionally collects the
 emitted rows into one machine-readable summary (written to PATH, or
 printed as a final ``benchmarks JSON:`` line when no PATH is given).
@@ -46,6 +48,12 @@ def main() -> None:
         "(pipeline_throughput); 0 keeps each bench's default",
     )
     ap.add_argument(
+        "--aot",
+        action="store_true",
+        help="also run the whole-graph AOT executable in benches that "
+        "support it (compiled_e2e) and assert it beats per-segment dispatch",
+    )
+    ap.add_argument(
         "--json",
         nargs="?",
         const="-",
@@ -73,6 +81,7 @@ def main() -> None:
         calibration_accuracy,
         common,
         compiled_e2e,
+        dispatch_overhead,
         dispatch_scaling,
         fig7_diana_micro,
         fig8_gap9_micro,
@@ -93,6 +102,7 @@ def main() -> None:
         "fig9_10": fig9_10_l1_scaling,
         "fig11": fig11_resnet_mapping,
         "dispatch_scaling": dispatch_scaling,
+        "dispatch_overhead": dispatch_overhead,
         "compiled_e2e": compiled_e2e,
         "calibration_accuracy": calibration_accuracy,
         "pipeline_throughput": pipeline_throughput,
@@ -112,6 +122,8 @@ def main() -> None:
             kwargs["target"] = args.target
         if args.repeat > 0 and "repeat" in sig:
             kwargs["repeat"] = args.repeat
+        if args.aot and "aot" in sig:
+            kwargs["aot"] = True
         common.drain_rows()
         try:
             mod.run(**kwargs)

@@ -4,13 +4,17 @@ bit-exact execution and per-module breakdown — plus the Fig. 9-style L1
 ablation on one network.
 
   PYTHONPATH=src python examples/compile_cnn_match.py [--json] [--pipeline]
+                                                      [--aot]
 
 ``--json`` additionally prints the machine-readable deployment report
 (``CompiledModel.report_dict()``) — the same payload CI and the
 calibration fitter consume.  ``--pipeline`` re-dispatches under the
 makespan objective and prints the concurrent schedule's Gantt timeline
 and per-module occupancy (``repro.pipeline``) next to the sequential
-report, then proves the pipelined runtime bit-exact.
+report, then proves the pipelined runtime bit-exact.  ``--aot`` fuses
+the whole graph into ONE jitted executable (``repro.backend.aot``),
+proves it bit-exact against the per-segment path, and prints the
+per-segment vs AOT latency with the measured dispatch overhead.
 """
 
 import json
@@ -69,6 +73,23 @@ if "--pipeline" in sys.argv[1:]:
     err = pipelined.verify(params, x)
     assert err == 0.0, f"pipelined run diverged from sequential: {err}"
     print(f"pipelined == sequential (max |err| = {err})")
+
+# 3c. whole-graph AOT executable (PR 6)
+if "--aot" in sys.argv[1:]:
+    aot = compiled.to_aot()
+    aot.warmup(params, x)  # explicit trace + XLA compile, outside timing
+    aot_err = aot.verify(params, x)
+    assert aot_err == 0.0, f"AOT diverged from the per-segment path: {aot_err}"
+    ov = aot.measure_dispatch_overhead(params, x)
+    print(f"\nAOT == per-segment (max |err| = {aot_err})")
+    print(f"per-segment path : {ov['per_segment_path_us']:9.1f} us "
+          f"({ov['segments']} host dispatches)")
+    print(f"one-jit AOT      : {ov['aot_us']:9.1f} us (1 dispatch)")
+    print(f"dispatch overhead: {ov['dispatch_overhead_per_segment_us']:9.2f} us/segment "
+          f"-> {ov['per_segment_path_us'] / max(ov['aot_us'], 1e-9):.2f}x speedup")
+    entry = next(iter(aot._entries.values()))
+    print(f"trace {entry.trace_us/1e3:.1f} ms, XLA compile {entry.compile_us/1e3:.1f} ms, "
+          f"donation mode {aot.memory!r}")
 
 # 4. L1 ablation (Fig. 9/10)
 print("\nGAP9 L1 scaling (MACs/cycle):")

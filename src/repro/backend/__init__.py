@@ -10,20 +10,33 @@ this package walks a :class:`~repro.core.dispatcher.MappedGraph` and
 * **plans memory statically** — liveness over the segment execution order,
   first-fit + hill-climb offsets into flat per-level arenas, validated
   against each module's declared ``MemoryLevel`` capacities
-  (:mod:`repro.backend.memory`), and
+  (:mod:`repro.backend.memory`),
 * **runs** the result with per-segment timing and a predicted-vs-measured
   report, golden-checked bit-exact against the ``repro.cnn`` interpreter
-  (:mod:`repro.backend.runtime`).
+  (:mod:`repro.backend.runtime`), and
+* **fuses the whole graph into one jitted AOT executable** — all segments
+  inlined in schedule order, zero per-segment host dispatch, the static
+  memory plan expressible as a donated arena with double-buffered
+  cross-module staging (:mod:`repro.backend.aot`).
 """
 
+from .aot import (
+    AotCompileError,
+    AotEntry,
+    AotModel,
+    ChainExecutor,
+    build_chains,
+    compile_aot,
+)
 from .lower import LoweredSegment, LoweringError, lower
-from .memory import BufferAlloc, MemoryPlan, MemoryPlanError, plan_memory
+from .memory import ArenaView, BufferAlloc, MemoryPlan, MemoryPlanError, plan_memory
 from .runtime import (
     CompiledModel,
     DivergenceReport,
     SegmentDivergence,
     SegmentTiming,
     UnsetFrequencyWarning,
+    as_input_array,
 )
 
 __all__ = [
@@ -31,6 +44,7 @@ __all__ = [
     "LoweredSegment",
     "LoweringError",
     "plan_memory",
+    "ArenaView",
     "MemoryPlan",
     "MemoryPlanError",
     "BufferAlloc",
@@ -39,4 +53,11 @@ __all__ = [
     "SegmentDivergence",
     "SegmentTiming",
     "UnsetFrequencyWarning",
+    "as_input_array",
+    "AotCompileError",
+    "AotEntry",
+    "AotModel",
+    "ChainExecutor",
+    "build_chains",
+    "compile_aot",
 ]

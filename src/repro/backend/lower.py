@@ -240,6 +240,7 @@ def lower(
     interpret: bool = True,
     allow_spill: bool = True,
     hill_climb_iters: int = 200,
+    aot: bool = False,
 ) -> CompiledModel:
     """Compile a MappedGraph into fused, memory-planned segment executors.
 
@@ -251,7 +252,10 @@ def lower(
     "fused" fidelity — same fused segments and memory plan, but the
     fastest host execution (the default is the HW-faithful execution
     shape: L1-stripe conv bands + the Pallas int8 GEMM).  ``interpret``
-    is forwarded to the Pallas kernels (True on CPU).
+    is forwarded to the Pallas kernels (True on CPU).  ``aot=True``
+    additionally attaches the whole-graph one-jit AOT executor
+    (``CompiledModel.to_aot()``; XLA compile stays lazy until its first
+    ``warmup``/``run``), so ``report_dict()`` carries the AOT payload.
     """
     if target is None:
         target = mapped.target
@@ -331,4 +335,7 @@ def lower(
     plan = plan_memory(
         mapped, allow_spill=allow_spill, hill_climb_iters=hill_climb_iters
     )
-    return CompiledModel(mapped=mapped, segments=lowered, memory_plan=plan)
+    model = CompiledModel(mapped=mapped, segments=lowered, memory_plan=plan)
+    if aot:
+        model.to_aot()
+    return model

@@ -112,7 +112,9 @@ def apply_node(n: Node, p: dict, xs: list) -> jnp.ndarray:
         y = jnp.round((xs[0] * scale + addend) / (2.0**shift))
         return jnp.clip(y, -128, 127)
     if n.op == "relu":
-        return jnp.maximum(xs[0], 0.0)
+        # dtype-preserving zero: a bare 0.0 literal would silently widen
+        # integer/quantized activations to float32
+        return jnp.maximum(xs[0], jnp.zeros((), xs[0].dtype))
     if n.op == "add":
         if len(xs) == 2:
             return xs[0] + xs[1]

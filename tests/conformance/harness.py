@@ -68,6 +68,13 @@ def compiled_for(net: str, tname: str):
 
 
 @lru_cache(maxsize=None)
+def aot_for(net: str, tname: str):
+    """Whole-graph AOT executable via ``CompiledModel.to_aot()`` — the
+    memoized model also holds the stats ``report_dict()["aot"]`` ships."""
+    return compiled_for(net, tname).to_aot()
+
+
+@lru_cache(maxsize=None)
 def io_for(net: str):
     g = graph_for(net)
     params = init_graph_params(g)
