@@ -9,7 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 ``--target`` takes any registered target name (``repro.targets.registry``,
 see ``list_targets()``) and is forwarded to every benchmark whose ``run``
 accepts one (``dispatch_scaling``, ``compiled_e2e``,
-``calibration_accuracy``, ``dispatch_overhead``) — the per-figure benches
+``calibration_accuracy``, ``dispatch_overhead``, ``obs_overhead``) — the
+per-figure benches
 are pinned to the paper's published SoCs.  ``--aot`` is forwarded to
 benches that compare the whole-graph AOT executable against the
 per-segment path (``compiled_e2e``).  ``--list-targets`` prints every registered
@@ -87,6 +88,7 @@ def main() -> None:
         fig8_gap9_micro,
         fig9_10_l1_scaling,
         fig11_resnet_mapping,
+        obs_overhead,
         pipeline_throughput,
         pod_roofline_summary,
         table3_e2e,
@@ -106,6 +108,7 @@ def main() -> None:
         "compiled_e2e": compiled_e2e,
         "calibration_accuracy": calibration_accuracy,
         "pipeline_throughput": pipeline_throughput,
+        "obs_overhead": obs_overhead,
         "tpu_kernels": tpu_kernel_schedules,
         "pod_roofline": pod_roofline_summary,
     }

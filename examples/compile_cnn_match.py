@@ -4,7 +4,7 @@ bit-exact execution and per-module breakdown — plus the Fig. 9-style L1
 ablation on one network.
 
   PYTHONPATH=src python examples/compile_cnn_match.py [--json] [--pipeline]
-                                                      [--aot]
+                                                      [--aot] [--trace]
 
 ``--json`` additionally prints the machine-readable deployment report
 (``CompiledModel.report_dict()``) — the same payload CI and the
@@ -15,6 +15,11 @@ report, then proves the pipelined runtime bit-exact.  ``--aot`` fuses
 the whole graph into ONE jitted executable (``repro.backend.aot``),
 proves it bit-exact against the per-segment path, and prints the
 per-segment vs AOT latency with the measured dispatch overhead.
+``--trace`` records the whole MobileNet x gap9 flow — compile-phase
+spans, measured per-module runtime lanes, pipelined worker lanes and the
+predicted Gantt side-by-side — into one Chrome-trace JSON
+(``match_trace.json``, loadable in ui.perfetto.dev) and prints the
+predicted-vs-measured drift summary (``repro.obs``).
 """
 
 import json
@@ -90,6 +95,49 @@ if "--aot" in sys.argv[1:]:
     entry = next(iter(aot._entries.values()))
     print(f"trace {entry.trace_us/1e3:.1f} ms, XLA compile {entry.compile_us/1e3:.1f} ms, "
           f"donation mode {aot.memory!r}")
+
+# 3d. end-to-end observability: one Chrome trace of the whole flow (PR 7)
+if "--trace" in sys.argv[1:]:
+    from repro import obs
+    from repro.cnn import mlperf_tiny_networks
+    from repro.pipeline import PipelinedModel
+
+    trace_path = "match_trace.json"
+    obs.enable_tracing()  # from here on every compile/runtime span records
+
+    mn = mlperf_tiny_networks()["MobileNet"]
+    mn_params = init_graph_params(mn)
+    mn_x = {
+        k: np.random.default_rng(0).integers(-128, 128, s).astype("float32")
+        for k, s in mn.inputs.items()
+    }
+    # compile-phase spans: enumeration, DSE flush, Viterbi DP, makespan
+    # re-rank, per-segment lowering routes, memory-planner packing
+    mn_mapped = dispatch(mn, "gap9", objective="makespan")
+    mn_compiled = lower(mn_mapped)
+    mn_compiled.run(mn_params, mn_x)  # warmup (jit compile)
+    mn_compiled.run(mn_params, mn_x, timed=True)  # measured run:* lanes
+    pipelined = PipelinedModel(mn_compiled)
+    pipelined.run(mn_params, mn_x)  # pipeline:* worker lanes
+    # predicted Gantt lanes next to the measured ones (pid "predicted")
+    obs.trace_predicted_schedule(pipelined.schedule, mn_compiled.target)
+
+    obs.save_trace(trace_path)
+    obs.disable_tracing()
+    doc = json.loads(Path(trace_path).read_text())
+    names = {}
+    for e in doc["traceEvents"]:
+        if e.get("ph") == "M" and e.get("name") == "thread_name":
+            names[(e["pid"], e["tid"])] = e["args"]["name"]
+    print(f"\ntrace: {len(doc['traceEvents'])} events -> {trace_path} "
+          "(load in ui.perfetto.dev or chrome://tracing)")
+    print("lanes:", ", ".join(sorted(set(names.values()))))
+    drift = obs.drift_dict("gap9")
+    print(f"drift (threshold {drift['threshold']:g}x):")
+    for key, grp in sorted(drift["groups"].items()):
+        print(f"  {key:14s} geomean {grp['geomean_ratio']:8.2f}x "
+              f"over {grp['count']} segments"
+              + ("  <- re-fit suggested" if grp["exceeds_threshold"] else ""))
 
 # 4. L1 ablation (Fig. 9/10)
 print("\nGAP9 L1 scaling (MACs/cycle):")

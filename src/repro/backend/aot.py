@@ -58,6 +58,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 if TYPE_CHECKING:  # avoid circular imports at module load
     from .lower import LoweredSegment
     from .runtime import CompiledModel
@@ -222,7 +224,9 @@ class AotModel:
         with self._lock:
             entry = self._entries.get(key)
             if entry is not None:
+                obs.counter("aot.cache_hits").inc()
                 return entry
+            obs.counter("aot.cache_misses").inc()
             entry = self._compile(params, coerced, sig)
             self._entries[key] = entry
             return entry
@@ -240,17 +244,28 @@ class AotModel:
             jitted = jax.jit(fn, donate_argnums=(0,) if self.donate_inputs else ())
             arena_elems, fallbacks = 0, ()
             args = (abstract,)
-        t0 = time.perf_counter()
-        try:
-            lowered = jitted.lower(*args)
-        except Exception as e:
-            raise AotCompileError(
-                f"whole-graph trace failed for {self.graph.name} on "
-                f"{self.target.name}: {e}"
-            ) from e
-        t1 = time.perf_counter()
-        executable = lowered.compile()
-        t2 = time.perf_counter()
+        with obs.span(
+            "aot.compile", cat="compile", graph=self.graph.name,
+            target=self.target.name, memory=self.memory,
+        ) as sp:
+            t0 = time.perf_counter()
+            try:
+                lowered = jitted.lower(*args)
+            except Exception as e:
+                raise AotCompileError(
+                    f"whole-graph trace failed for {self.graph.name} on "
+                    f"{self.target.name}: {e}"
+                ) from e
+            t1 = time.perf_counter()
+            executable = lowered.compile()
+            t2 = time.perf_counter()
+            sp.set(
+                trace_us=(t1 - t0) * 1e6,
+                compile_us=(t2 - t1) * 1e6,
+                arena_fallbacks=list(fallbacks),
+            )
+        if fallbacks:
+            obs.counter("aot.arena_fallbacks").inc(len(fallbacks))
         entry = AotEntry(
             signature=sig,
             executable=executable,
@@ -395,6 +410,19 @@ class AotModel:
         coerced = {k: _as_input(v) for k, v in inputs.items()}
         entry = self.warmup(params, coerced)
         entry.calls += 1
+        tr = obs.get_tracer()
+        if tr.enabled:
+            t0_us = tr.now_us()
+            try:
+                return self._run_entry(entry, coerced)
+            finally:
+                tr.complete(
+                    f"aot.run:{self.graph.name}", t0_us, cat="runtime",
+                    lane="run:aot", attrs={"memory": self.memory},
+                )
+        return self._run_entry(entry, coerced)
+
+    def _run_entry(self, entry: "AotEntry", coerced: dict) -> dict:
         if self.memory == "arena":
             with self._lock:  # the donated arena is single-owner state
                 arena = entry.arena

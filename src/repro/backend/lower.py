@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import (
     KernelSchedule,
     MappedGraph,
@@ -294,6 +295,11 @@ def lower(
     if missing:
         raise LoweringError(f"mapped graph does not cover nodes: {sorted(missing)}")
 
+    lower_span = obs.span(
+        "lower", cat="compile", graph=graph.name, target=target.name,
+        segments=len(mapped.segments),
+    )
+    lower_span.__enter__()
     lowered: list[LoweredSegment] = []
     for i, seg in enumerate(mapped.segments):
         # chain internals must be single-consumer (the pattern matcher
@@ -307,8 +313,11 @@ def lower(
                 )
         inputs = seg.external_inputs(graph)
         out_name = seg.output_node.name
-        ksched = _kernel_schedule(seg, target)
-        route = _route_of(seg, use_pallas)
+        with obs.span("lower.segment", cat="compile") as sp:
+            ksched = _kernel_schedule(seg, target)
+            route = _route_of(seg, use_pallas)
+            sp.set(segment=seg.anchor.name, module=seg.module, route=route)
+        obs.counter(f"lower.route.{route}").inc()
         meta: dict = {"pattern": seg.pattern}
         if route == "tiled_conv":
             impl, block_oy = _tiled_conv_impl(seg.anchor, ksched, band_tiling)
@@ -335,6 +344,10 @@ def lower(
     plan = plan_memory(
         mapped, allow_spill=allow_spill, hill_climb_iters=hill_climb_iters
     )
+    routes: dict[str, int] = {}
+    for ls in lowered:
+        routes[ls.route] = routes.get(ls.route, 0) + 1
+    lower_span.set(routes=routes).__exit__(None, None, None)
     model = CompiledModel(mapped=mapped, segments=lowered, memory_plan=plan)
     if aot:
         model.to_aot()

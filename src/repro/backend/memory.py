@@ -27,6 +27,7 @@ from __future__ import annotations
 import random
 from dataclasses import dataclass, field
 
+from repro import obs
 from repro.core import MappedGraph, tile_working_set
 
 __all__ = [
@@ -266,20 +267,32 @@ def _hill_climb(
     iters: int,
     seed: int,
     conflicts=None,
+    stats: dict | None = None,
 ) -> tuple[dict[str, int], int]:
-    """Bounded stochastic hill-climb over the first-fit allocation order."""
+    """Bounded stochastic hill-climb over the first-fit allocation order.
+
+    ``stats`` (optional out-param, so the return shape stays a 2-tuple
+    for existing callers) receives iteration/improvement counts and the
+    first-fit baseline peak for the trace.
+    """
     rng = random.Random(seed)
     best_order = list(order)
     best_offsets, best_peak = _first_fit(best_order, lives, conflicts)
+    if stats is not None:
+        stats.update(iters=0, improvements=0, first_fit_peak=best_peak)
     if len(order) < 2:
         return best_offsets, best_peak
-    for _ in range(iters):
+    improvements = 0
+    for it in range(iters):
         i, j = rng.sample(range(len(best_order)), 2)
         cand = list(best_order)
         cand[i], cand[j] = cand[j], cand[i]
         offsets, peak = _first_fit(cand, lives, conflicts)
         if peak < best_peak:
             best_order, best_offsets, best_peak = cand, offsets, peak
+            improvements += 1
+    if stats is not None:
+        stats.update(iters=iters, improvements=improvements)
     return best_offsets, best_peak
 
 
@@ -542,7 +555,12 @@ def plan_memory(
 
     # ---- home-level arena: first-fit + hill-climb -----------------------
     order = sorted(lives, key=lambda k: (lives[k][1], -lives[k][0], k))
-    offsets, peak = _hill_climb(order, lives, hill_climb_iters, seed, conflict_fn)
+    hc_stats: dict = {}
+    with obs.span("plan_memory.pack", cat="compile", buffers=len(lives)) as sp:
+        offsets, peak = _hill_climb(
+            order, lives, hill_climb_iters, seed, conflict_fn, stats=hc_stats
+        )
+        sp.set(arena_peak=peak, **hc_stats)
     buffers = {
         name: BufferAlloc(name, lives[name][0], offsets[name], lives[name][1], lives[name][2])
         for name in lives
@@ -620,6 +638,11 @@ def plan_memory(
             spills.append(segments[victim].anchor.name)
             l1_by_segment[victim] = {}
 
+    if spills:
+        obs.counter("memory.spills").inc(len(spills))
+        obs.get_tracer().instant(
+            "memory.spills", cat="compile", segments=list(spills)
+        )
     from repro.cnn.analysis import weight_bytes  # graph-generic, no cycle
 
     return MemoryPlan(

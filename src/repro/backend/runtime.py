@@ -14,7 +14,6 @@ Bit-exactness contract: ``run(params, inputs)`` returns exactly what
 from __future__ import annotations
 
 import time
-import warnings
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING
 
@@ -22,7 +21,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import MappedGraph
+from repro.obs.log import MatchWarning
+from repro.obs.log import warn as obs_warn
 
 if TYPE_CHECKING:  # avoid a circular import with .lower
     from .lower import LoweredSegment
@@ -59,7 +61,7 @@ def as_input_array(v) -> jnp.ndarray:
     return jnp.asarray(v, jnp.float32)
 
 
-class UnsetFrequencyWarning(RuntimeWarning):
+class UnsetFrequencyWarning(MatchWarning, RuntimeWarning):
     """A SegmentTiming converted wall-clock to cycles with no clock set.
 
     ``frequency_hz`` defaults to 0.0, which silently turns every
@@ -86,12 +88,13 @@ class SegmentTiming:
     @property
     def measured_cycles(self) -> float:
         if self.frequency_hz <= 0.0:
-            warnings.warn(
+            obs_warn(
                 f"SegmentTiming[{self.name}]: frequency_hz is unset "
                 f"({self.frequency_hz}); measured_cycles is 0 and would "
                 "poison a calibration fit",
                 UnsetFrequencyWarning,
                 stacklevel=2,
+                logger="runtime",
             )
             return 0.0
         return self.measured_us * 1e-6 * self.frequency_hz
@@ -161,6 +164,17 @@ class DivergenceReport:
             f"|{first.output_name} - ref| = {first.max_abs_err}"
         )
 
+    def to_dict(self) -> dict:
+        """JSON-safe payload; also what the trace span event carries when
+        ``verify(per_segment=True)`` finds a deviation."""
+        first = self.first_divergent
+        return {
+            "max_abs_err": self.max_abs_err,
+            "exact": self.exact,
+            "first_divergent": first.to_dict() if first is not None else None,
+            "segments": [s.to_dict() for s in self.segments],
+        }
+
 
 @dataclass
 class CompiledModel:
@@ -196,6 +210,8 @@ class CompiledModel:
         env: dict[str, jnp.ndarray] = {
             k: as_input_array(v) for k, v in inputs.items()
         }
+        tr = obs.get_tracer()
+        tracing = tr.enabled
         timings: list[SegmentTiming] = []
         for ls in self.segments:
             xs = [env[name] for name in ls.input_names]
@@ -217,11 +233,29 @@ class CompiledModel:
                         frequency_hz=self.target.module(ls.module).frequency_hz,
                     )
                 )
+                obs.histogram(f"runtime.segment_us.{ls.module}").observe(us)
+                if tracing:
+                    # re-anchor the measured window onto the module lane
+                    end = tr.now_us()
+                    tr.complete(
+                        ls.name, end - us, cat="runtime", lane=f"run:{ls.module}",
+                        attrs={"route": ls.route, "predicted_cycles": ls.segment.cycles},
+                    )
+            elif tracing:
+                t0_us = tr.now_us()
+                out = ls.fn(seg_params, *xs)
+                # async dispatch: the span covers host dispatch, not
+                # device compute (timed=True gives the blocked window)
+                tr.complete(
+                    ls.name, t0_us, cat="runtime", lane=f"run:{ls.module}",
+                    attrs={"route": ls.route, "async": True},
+                )
             else:
                 out = ls.fn(seg_params, *xs)
             env[ls.output_name] = out
         if timed:
             self._last_timings = timings
+            obs.observe_timings(self.target.name, timings)
         return {o: env[o] for o in self.graph.outputs}
 
     @property
@@ -273,7 +307,16 @@ class CompiledModel:
             rows.append(
                 SegmentDivergence(ls.name, ls.module, ls.route, ls.output_name, err)
             )
-        return DivergenceReport(max_abs_err=worst, segments=tuple(rows))
+        report = DivergenceReport(max_abs_err=worst, segments=tuple(rows))
+        first = report.first_divergent
+        if first is not None:
+            obs.counter("verify.divergences").inc()
+            # localizable from the trace alone: the instant carries the
+            # first deviating segment and the full per-segment table
+            obs.get_tracer().instant(
+                f"divergence:{first.name}", cat="verify", **report.to_dict()
+            )
+        return report
 
     # -- accounting -----------------------------------------------------
     def predicted_cycles(self) -> float:
@@ -363,6 +406,12 @@ class CompiledModel:
             # Gantt-style concurrent schedule (repro.pipeline): per-module
             # lanes with start/finish plus the predicted makespan
             "pipeline": self.pipeline_schedule().timeline_dict(),
+            # process-wide observability snapshot (PR 7): metric registry
+            # plus this target's predicted-vs-measured drift aggregates
+            "obs": {
+                "metrics": obs.metrics_dict(),
+                "drift": obs.drift_dict(t.name),
+            },
         }
         if self._aot is not None:
             # trace/compile cost, executable size, donation coverage and

@@ -252,19 +252,27 @@ def run_microbench(
             variants.append(tgt.restricted([m.name]))
         variants.append(tgt.restricted([]))  # fallback (CPU) only
 
+    from repro import obs
+
     samples: list[MicrobenchSample] = []
-    for variant in variants:
-        for g in graphs:
-            mapped = dispatch(g, variant, budget=budget)
-            compiled = lower(mapped)
-            params, x = graph_io(g)
-            got = collect_samples(compiled, params, x, repeats=repeats)
-            samples.extend(got)
-            if verbose:
-                print(
-                    f"  microbench {variant.name:>20s} / {g.name:<24s} -> "
-                    f"{len(got)} samples"
-                )
+    with obs.span(
+        "calibrate.microbench", cat="compile", target=tgt.name,
+        variants=len(variants), workloads=len(graphs),
+    ) as sweep_span:
+        for variant in variants:
+            for g in graphs:
+                mapped = dispatch(g, variant, budget=budget)
+                compiled = lower(mapped)
+                params, x = graph_io(g)
+                got = collect_samples(compiled, params, x, repeats=repeats)
+                samples.extend(got)
+                if verbose:
+                    print(
+                        f"  microbench {variant.name:>20s} / {g.name:<24s} -> "
+                        f"{len(got)} samples"
+                    )
+        sweep_span.set(samples=len(samples))
+    obs.counter("calibrate.microbench_samples").inc(len(samples))
     return samples
 
 

@@ -22,12 +22,13 @@ import hashlib
 import json
 import math
 import os
-import warnings
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Mapping
 
 from repro.core.target import MatchTarget
+from repro.obs.log import MatchWarning
+from repro.obs.log import warn as obs_warn
 
 __all__ = [
     "PROFILE_VERSION",
@@ -47,7 +48,7 @@ PROFILE_VERSION = 1
 PROFILE_ENV = "MATCH_CALIBRATION_PROFILE"
 
 
-class CalibrationProfileWarning(UserWarning):
+class CalibrationProfileWarning(MatchWarning):
     """A calibration profile could not be applied (corrupt, stale, or for
     another target) and the declared hardware model is used instead."""
 
@@ -184,11 +185,12 @@ def load_profile(path: str | os.PathLike) -> CalibrationProfile | None:
     the caller falls back to the declared model (never crash a compile)."""
 
     def reject(why: str) -> None:
-        warnings.warn(
+        obs_warn(
             f"calibration profile {path}: {why}; using the declared "
             f"(uncalibrated) hardware model",
             CalibrationProfileWarning,
             stacklevel=3,
+            logger="calibrate",
         )
         return None
 
@@ -215,17 +217,19 @@ def coerce_profile(profile) -> CalibrationProfile | None:
         try:
             return CalibrationProfile.from_dict(profile)
         except (ValueError, TypeError, KeyError) as e:
-            warnings.warn(
+            obs_warn(
                 f"calibration profile mapping rejected: {e}; using the "
                 f"declared hardware model",
                 CalibrationProfileWarning,
                 stacklevel=2,
+                logger="calibrate",
             )
             return None
-    warnings.warn(
+    obs_warn(
         f"cannot interpret {type(profile).__name__} as a calibration profile",
         CalibrationProfileWarning,
         stacklevel=2,
+        logger="calibrate",
     )
     return None
 
@@ -264,12 +268,13 @@ def apply_profile(
     # "base[...]") drops modules *on purpose* — only warn when the
     # profile names modules its own base target never declared
     if unknown and target.name == profile.target:
-        warnings.warn(
+        obs_warn(
             f"calibration profile for {profile.target!r} names modules "
             f"{unknown} that target {target.name!r} does not declare; "
             f"skipping those entries",
             CalibrationProfileWarning,
             stacklevel=2,
+            logger="calibrate",
         )
     new = target.recalibrated(overrides, tag=profile.tag())
     new.attrs["calibration"] = {

@@ -35,6 +35,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Sequence
 
+from repro import obs
+
 from .cost_model import evaluate_mapping, transfer_cost
 from .graph import Graph, Node
 from .loma import SchedulePlanner, ScheduleResult, TemporalMapping, search_schedule
@@ -318,9 +320,17 @@ def _dispatch_dp(
     if n == 0:
         return MappedGraph(graph, target, [])
 
-    cands = _enumerate_candidates(graph, target, planner, budget)
-    planner.flush()
-    cands = _resolve_schedules(cands, planner, budget)
+    with obs.span("dispatch.enumerate", cat="compile") as sp:
+        cands = _enumerate_candidates(graph, target, planner, budget)
+        sp.set(positions=n, candidates=sum(len(c) for c in cands))
+    stats0 = dict(planner.stats)
+    with obs.span("dispatch.dse_flush", cat="compile") as sp:
+        planner.flush()
+        # cache hit/miss attribution for this dispatch: the planner is
+        # shared across compiles, so report the delta, not the totals
+        sp.set(**{k: planner.stats[k] - stats0.get(k, 0) for k in planner.stats})
+    with obs.span("dispatch.resolve", cat="compile"):
+        cands = _resolve_schedules(cands, planner, budget)
 
     modmap = {m.name: m for m in target.all_modules()}
 
@@ -351,6 +361,8 @@ def _dispatch_dp(
     finals: dict[tuple, _State] = {}
     best_final: _State | None = None
 
+    viterbi_span = obs.span("dispatch.viterbi", cat="compile", nodes=n, beam=beam)
+    viterbi_span.__enter__()
     for i in range(n):
         here = states[i]
         if not here:
@@ -392,6 +404,10 @@ def _dispatch_dp(
                     elif best_final is None or cost < best_final.cost:
                         best_final = _State(cost, st.segments + (seg,), mod_of)
 
+    viterbi_span.set(final_states=len(finals) if track_finals else 1).__exit__(
+        None, None, None
+    )
+
     attrs = {"policy": "dp", "objective": objective, "planner_stats": dict(planner.stats)}
     if objective == "makespan":
         # re-rank the surviving complete segmentations by their scheduled
@@ -399,15 +415,17 @@ def _dispatch_dp(
         # with no overlap opportunity reproduce the cycles objective)
         from repro.pipeline.schedule import schedule_pipeline  # no cycle: late
 
-        ranked = sorted(finals.values(), key=lambda s: s.cost)[:_FINALS_KEPT]
-        best: _State | None = None
-        best_key: tuple[float, float] | None = None
-        for st in ranked:
-            ps = schedule_pipeline(MappedGraph(graph, target, list(st.segments)))
-            key = (ps.makespan, st.cost)
-            if best_key is None or key < best_key:
-                best, best_key = st, key
-        final = best
+        with obs.span("dispatch.makespan_rerank", cat="compile") as sp:
+            ranked = sorted(finals.values(), key=lambda s: s.cost)[:_FINALS_KEPT]
+            best: _State | None = None
+            best_key: tuple[float, float] | None = None
+            for st in ranked:
+                ps = schedule_pipeline(MappedGraph(graph, target, list(st.segments)))
+                key = (ps.makespan, st.cost)
+                if best_key is None or key < best_key:
+                    best, best_key = st, key
+            final = best
+            sp.set(candidates=len(ranked), makespan=best_key[0])
         attrs["predicted_makespan"] = best_key[0]
         attrs["candidates_reranked"] = len(ranked)
     else:
@@ -596,4 +614,9 @@ def dispatch(
         )
     if planner is None:
         planner = SchedulePlanner(cache_path=cache_path)
-    return _dispatch_dp(graph, target, planner, budget, beam, verbose, objective)
+    obs.counter("dispatch.calls").inc()
+    with obs.span(
+        "dispatch", cat="compile",
+        graph=graph.name, target=target.name, objective=objective,
+    ):
+        return _dispatch_dp(graph, target, planner, budget, beam, verbose, objective)

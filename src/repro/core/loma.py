@@ -38,12 +38,15 @@ import json
 import math
 import os
 import uuid
-import warnings
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field, replace
 from functools import lru_cache
 from pathlib import Path
 from typing import Iterable, Mapping, Sequence
+
+from repro.obs import metrics as obs_metrics
+from repro.obs.log import MatchWarning
+from repro.obs.log import warn as obs_warn
 
 from .cost_model import INFEASIBLE, CostBreakdown, evaluate_mapping
 from .target import ExecutionModule
@@ -526,7 +529,7 @@ def _deserialize_result(d: dict) -> ScheduleResult:
     )
 
 
-class ScheduleCacheWarning(UserWarning):
+class ScheduleCacheWarning(MatchWarning):
     """A persistent schedule cache could not be used (corrupt, stale, or
     version-mismatched) and a fresh search will run instead."""
 
@@ -581,11 +584,12 @@ class SchedulePlanner:
         fresh search — a cache file must never be able to fail a compile."""
 
         def reject(why: str) -> dict[str, ScheduleResult]:
-            warnings.warn(
+            obs_warn(
                 f"schedule cache {self.cache_path}: {why}; ignoring it and "
                 f"re-running the search",
                 ScheduleCacheWarning,
                 stacklevel=4,
+                logger="loma",
             )
             return {}
 
@@ -613,11 +617,12 @@ class SchedulePlanner:
             except (KeyError, TypeError, ValueError, AttributeError):
                 bad += 1
         if bad:
-            warnings.warn(
+            obs_warn(
                 f"schedule cache {self.cache_path}: skipped {bad} malformed "
                 f"entr{'y' if bad == 1 else 'ies'} (kept {len(results)})",
                 ScheduleCacheWarning,
                 stacklevel=3,
+                logger="loma",
             )
         return results
 
@@ -629,12 +634,16 @@ class SchedulePlanner:
         """Register one (workload, module) query; returns its cache key."""
         key = self._key(workload, module, budget)
         self.stats["requests"] += 1
+        obs_metrics.counter("dse.requests").inc()
         if key in self._results:
             self.stats["hits"] += 1
+            obs_metrics.counter("dse.cache_hits").inc()
             if key in self._from_disk:
                 self.stats["disk_hits"] += 1
+                obs_metrics.counter("dse.disk_hits").inc()
         elif key in self._pending:
             self.stats["deduped"] += 1
+            obs_metrics.counter("dse.deduped").inc()
         else:
             self._pending[key] = (workload, module, budget)
         return key
@@ -658,6 +667,7 @@ class SchedulePlanner:
         for key, res in done:
             self._results[key] = res
             self.stats["searched"] += 1
+        obs_metrics.counter("dse.searched").inc(len(done))
         self._dirty = True
         self.save()
 

@@ -1,0 +1,91 @@
+"""repro.obs — observability for the compile -> run pipeline (PR 7).
+
+One import surface over three small modules:
+
+* :mod:`repro.obs.trace` — thread-safe span tracer exporting Chrome
+  trace-event / Perfetto JSON, with predicted-schedule Gantt lanes
+  rendered next to measured runtime lanes (``MATCH_TRACE=path``);
+* :mod:`repro.obs.metrics` — process-wide counters/gauges/histograms
+  (DSE queries, cache hit rates, spills, per-segment latencies),
+  snapshot via :func:`metrics_dict`, embedded in
+  ``CompiledModel.report_dict()["obs"]``;
+* :mod:`repro.obs.drift` — continuous predicted-vs-measured drift
+  aggregation per (target, module) with :class:`CalibrationDriftWarning`
+  pointing back at the PR 4 calibration loop;
+* :mod:`repro.obs.log` — the shared ``repro`` logger (``MATCH_LOG``)
+  and the :class:`MatchWarning` base every repo warning derives from.
+
+The package is stdlib-only at import time: ``repro.core`` and
+``repro.backend`` import it at module load, so importing them back here
+would cycle.  Anything needing repo types (``trace_predicted_schedule``)
+is duck-typed instead.
+
+CLI: ``python -m repro.obs summarize <trace.json>`` / ``drift
+<report.json>``.
+"""
+
+from __future__ import annotations
+
+from .drift import (
+    DRIFT_THRESHOLD_ENV,
+    CalibrationDriftWarning,
+    drift_dict,
+    drift_threshold,
+    observe_timings,
+    reset_drift,
+)
+from .log import LOG_ENV, MatchWarning, get_logger, log_level, warn
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    counter,
+    gauge,
+    histogram,
+    metrics_dict,
+    reset_metrics,
+)
+from .trace import (
+    TRACE_ENV,
+    Span,
+    Tracer,
+    disable_tracing,
+    enable_tracing,
+    get_tracer,
+    save_trace,
+    span,
+    trace_predicted_schedule,
+    tracing_enabled,
+)
+
+__all__ = [
+    "DRIFT_THRESHOLD_ENV",
+    "LOG_ENV",
+    "TRACE_ENV",
+    "CalibrationDriftWarning",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MatchWarning",
+    "Span",
+    "Tracer",
+    "counter",
+    "disable_tracing",
+    "drift_dict",
+    "drift_threshold",
+    "enable_tracing",
+    "gauge",
+    "get_logger",
+    "get_tracer",
+    "histogram",
+    "log_level",
+    "metrics_dict",
+    "observe_timings",
+    "reset_drift",
+    "reset_metrics",
+    "save_trace",
+    "span",
+    "trace_predicted_schedule",
+    "tracing_enabled",
+    "warn",
+]

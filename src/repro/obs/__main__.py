@@ -1,0 +1,124 @@
+"""``python -m repro.obs`` — offline views over obs artifacts (PR 7).
+
+Two subcommands, both pure-JSON consumers (no jax, no compile):
+
+``summarize <trace.json>``
+    Aggregate a Chrome trace produced via ``MATCH_TRACE`` /
+    ``obs.save_trace()``: per-(category, name) span counts and total/max
+    microseconds, plus the lane inventory — a terminal answer to "where
+    did compile time go" without opening Perfetto.
+
+``drift <report.json>``
+    Read a ``CompiledModel.report_dict()`` JSON (e.g. from
+    ``examples/compile_cnn_match.py --json``) and print per-module
+    predicted-vs-measured drift ratios from its timed segments, with a
+    threshold verdict matching :mod:`repro.obs.drift`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+from .drift import drift_threshold
+
+
+def _load(path: str) -> dict:
+    try:
+        return json.loads(Path(path).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise SystemExit(f"error: cannot read {path}: {e}")
+
+
+def cmd_summarize(path: str) -> int:
+    doc = _load(path)
+    events = doc.get("traceEvents", doc if isinstance(doc, list) else [])
+    lanes: dict[tuple, str] = {}
+    agg: dict[tuple, list[float]] = defaultdict(lambda: [0, 0.0, 0.0])  # n, total, max
+    spans = instants = 0
+    for ev in events:
+        ph = ev.get("ph")
+        if ph == "M" and ev.get("name") == "thread_name":
+            lanes[(ev.get("pid"), ev.get("tid"))] = ev.get("args", {}).get("name", "?")
+        elif ph == "X":
+            spans += 1
+            a = agg[(ev.get("cat", ""), ev.get("name", "?"))]
+            dur = float(ev.get("dur", 0.0))
+            a[0] += 1
+            a[1] += dur
+            if dur > a[2]:
+                a[2] = dur
+        elif ph == "i":
+            instants += 1
+    print(f"{path}: {spans} spans, {instants} instants, {len(lanes)} named lanes")
+    if lanes:
+        print("\nlanes:")
+        for (pid, _tid), name in sorted(lanes.items(), key=lambda kv: (kv[0][0], kv[1])):
+            kind = "predicted" if pid == 2 else "live"
+            print(f"  [{kind:9s}] {name}")
+    if agg:
+        print(f"\n{'cat':<12} {'span':<28} {'count':>6} {'total_ms':>10} {'max_ms':>9}")
+        for (cat, name), (n, total, mx) in sorted(
+            agg.items(), key=lambda kv: -kv[1][1]
+        ):
+            print(f"{cat:<12} {name:<28} {n:>6} {total / 1e3:>10.3f} {mx / 1e3:>9.3f}")
+    return 0
+
+
+def cmd_drift(path: str) -> int:
+    doc = _load(path)
+    segments = doc.get("segments", [])
+    timings = doc.get("timings") or [
+        s.get("timing") for s in segments if isinstance(s.get("timing"), dict)
+    ]
+    groups: dict[str, list[float]] = defaultdict(list)
+    for t in timings:
+        if not isinstance(t, dict):
+            continue
+        hz = float(t.get("frequency_hz") or 0.0)
+        predicted = float(t.get("predicted_cycles") or 0.0)
+        us = float(t.get("measured_us") or 0.0)
+        if hz <= 0.0 or predicted <= 0.0 or us <= 0.0:
+            continue
+        groups[t.get("module", "?")].append(us * 1e-6 * hz / predicted)
+    if not groups:
+        # report_dict only ships timings after a timed run
+        print(f"{path}: no timed segments (run with timed=True / --json after a timed run)")
+        return 1
+    threshold = drift_threshold()
+    tname = doc.get("target", "?")
+    print(f"{path}: target={tname} threshold={threshold:g}x")
+    print(f"\n{'module':<12} {'n':>4} {'geomean':>9} {'min':>8} {'max':>8}  verdict")
+    worst = 1.0
+    for module, ratios in sorted(groups.items()):
+        geo = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+        drifted = geo > threshold or geo < 1.0 / threshold
+        if max(geo, 1.0 / geo) > max(worst, 1.0 / worst):
+            worst = geo
+        verdict = "DRIFTED — re-fit (python -m repro.calibrate)" if drifted else "ok"
+        print(
+            f"{module:<12} {len(ratios):>4} {geo:>8.2f}x {min(ratios):>7.2f}x "
+            f"{max(ratios):>7.2f}x  {verdict}"
+        )
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(prog="python -m repro.obs", description=__doc__)
+    sub = p.add_subparsers(dest="cmd", required=True)
+    s = sub.add_parser("summarize", help="aggregate a Chrome trace JSON")
+    s.add_argument("trace", help="trace file (MATCH_TRACE output)")
+    d = sub.add_parser("drift", help="predicted-vs-measured drift from a report_dict JSON")
+    d.add_argument("report", help="report_dict() JSON (compile_cnn_match.py --json)")
+    args = p.parse_args(argv)
+    if args.cmd == "summarize":
+        return cmd_summarize(args.trace)
+    return cmd_drift(args.report)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,7 +23,10 @@ import threading
 from concurrent.futures import Future
 from typing import TYPE_CHECKING, Sequence
 
+import jax
 import jax.numpy as jnp
+
+from repro import obs
 
 from .schedule import PipelineSchedule, schedule_pipeline
 
@@ -260,7 +263,13 @@ class PipelinedModel:
         # computing immediately instead of draining the whole stream
         stop = threading.Event()
 
-        def worker(lane_steps: list[tuple[tuple[str, ...], tuple[str, ...], object]]) -> None:
+        tracer = obs.get_tracer()
+
+        def worker(
+            module: str,
+            lane_steps: list[tuple[tuple[str, ...], tuple[str, ...], object]],
+        ) -> None:
+            tracing = tracer.enabled
             for k in range(n_inputs):
                 admitted = admit[k].wait(timeout)
                 for ext_inputs, out_names, call in lane_steps:
@@ -277,7 +286,22 @@ class PipelinedModel:
                         continue
                     try:
                         xs = [futs[(k, nm)].result(timeout) for nm in ext_inputs]
-                        outs = call(*xs)
+                        if tracing:
+                            # block so the span covers the compute, not
+                            # just the async dispatch; untraced runs keep
+                            # jax's pipelined dispatch untouched
+                            t0_us = tracer.now_us()
+                            outs = jax.block_until_ready(call(*xs))
+                            tracer.complete(
+                                f"{out_names[0]}@{k}", t0_us, cat="runtime",
+                                lane=f"pipeline:{module}",
+                                attrs={
+                                    "input": k,
+                                    "thread": threading.get_ident(),
+                                },
+                            )
+                        else:
+                            outs = call(*xs)
                     except BaseException as e:  # propagate through the DAG
                         for of in out_futs:
                             of.set_exception(e)
@@ -286,7 +310,7 @@ class PipelinedModel:
                             of.set_result(out)
 
         threads = [
-            threading.Thread(target=worker, args=(lane,), daemon=True, name=f"pipeline-{m}")
+            threading.Thread(target=worker, args=(m, lane), daemon=True, name=f"pipeline-{m}")
             for m, lane in steps.items()
         ]
         for t in threads:

@@ -1,13 +1,16 @@
 """CompiledModel.report_dict() is the machine-readable contract CI and
 the calibration fitter consume: it must stay JSON-serializable on every
 registered target, round-trip losslessly, and carry the pipeline
-timeline payload (PR 5)."""
+timeline (PR 5), AOT stats (PR 6) and observability (PR 7) payloads."""
 
 import json
+import warnings
 
 import pytest
 
-from .harness import NETS, TARGETS, compiled_for, io_for
+from repro import obs
+
+from .harness import NETS, TARGETS, aot_for, compiled_for, io_for
 
 pytestmark = pytest.mark.parametrize("tname", TARGETS)
 
@@ -45,10 +48,47 @@ def test_report_dict_carries_pipeline_timeline(tname):
 def test_report_dict_roundtrips_with_measured_timings(tname):
     cm = compiled_for(NET, tname)
     params, x = io_for(NET)
-    cm.run(params, x, timed=True)
+    with warnings.catch_warnings():
+        # timed runs feed the drift monitor; its (deliberately generous)
+        # warning is not this test's subject
+        warnings.simplefilter("ignore", obs.MatchWarning)
+        cm.run(params, x, timed=True)
     d = cm.report_dict()
     back = json.loads(json.dumps(d, sort_keys=True))
     assert "timings" in back and len(back["timings"]) >= 1
     for row in back["timings"]:
         assert row["frequency_hz"] > 0.0
         assert row["measured_cycles"] >= 0.0
+
+
+def test_report_dict_carries_obs_metrics_and_drift(tname):
+    cm = compiled_for(NET, tname)
+    params, x = io_for(NET)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", obs.MatchWarning)
+        cm.run(params, x, timed=True)
+    d = json.loads(json.dumps(cm.report_dict()))
+    o = d["obs"]
+    assert set(o) == {"metrics", "drift"}
+    assert set(o["metrics"]) >= {"counters", "gauges", "histograms"}
+    # the timed run above must show up in the per-module latency
+    # histograms and in this target's drift groups
+    mods = {ls.module for ls in cm.segments}
+    for m in mods:
+        assert o["metrics"]["histograms"][f"runtime.segment_us.{m}"]["count"] >= 1
+    assert o["drift"]["threshold"] >= 1.0
+    assert set(o["drift"]["groups"]) >= {f"{cm.target.name}/{m}" for m in mods}
+    for g in o["drift"]["groups"].values():
+        assert g["count"] >= 1 and g["geomean_ratio"] > 0.0
+
+
+def test_report_dict_carries_aot_stats(tname):
+    aot = aot_for(NET, tname)  # memoized: to_aot() pins cm._aot
+    params, x = io_for(NET)
+    aot.warmup(params, x)
+    d = json.loads(json.dumps(compiled_for(NET, tname).report_dict()))
+    a = d["aot"]
+    assert a["segments"] == len(compiled_for(NET, tname).segments)
+    assert len(a["entries"]) >= 1  # warmup traced + compiled one signature
+    assert a["mode"] in ("arena", "xla")
+    assert 0.0 <= a["donation"]["coverage"] <= 1.0
