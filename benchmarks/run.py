@@ -91,6 +91,7 @@ def main() -> None:
         obs_overhead,
         pipeline_throughput,
         pod_roofline_summary,
+        serve_load,
         table3_e2e,
         table4_heterogeneity,
         tpu_kernel_schedules,
@@ -108,6 +109,7 @@ def main() -> None:
         "compiled_e2e": compiled_e2e,
         "calibration_accuracy": calibration_accuracy,
         "pipeline_throughput": pipeline_throughput,
+        "serve_load": serve_load,
         "obs_overhead": obs_overhead,
         "tpu_kernels": tpu_kernel_schedules,
         "pod_roofline": pod_roofline_summary,

@@ -1,0 +1,178 @@
+"""Request-level serving under Poisson load: sustained rps and tail latency.
+
+For each (MLPerf-Tiny net, target) pair:
+
+* **sequential baseline** — ``CompiledModel.run`` one request at a time
+  (what a naive deployment pays per user); its outputs double as the
+  bit-exactness reference for every served request;
+* **served** — a :class:`repro.serve.ModelServer` replica (vmap batch
+  packing + one AOT entry per batch shape + ``stream_depth`` batches in
+  flight) under an open-loop Poisson arrival process offered at ~4x the
+  sequential service rate, median sustained requests/sec over
+  ``--repeat`` rounds plus p50/p99 request latency.
+
+Rows (benchmarks/common.emit):
+
+  serve_<net>_<target>_seq,<us/req>,rps=<sequential rate>
+  serve_<net>_<target>_load,<p50 us>,p99=<us>;rps=<sustained>;x<speedup>
+
+Per-pair stats (offered/sustained rates, latency quantiles, replica
+stats) land in ``serve_load.json`` (path via ``MATCH_SERVE_LOAD``) — the
+artifact the CI smoke job uploads.  The default sweep gates: at least
+one pair must sustain >= 2x the sequential requests/sec while every
+served output stays bit-exact with the baseline.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+
+import numpy as np
+
+from .common import emit
+
+# DAE (dense GEMMs) is where batch packing pays hardest on a CPU host —
+# a (B, D) matmul against 8 (1, D) ones; DSCNN keeps a conv net in the
+# sweep even though vmapped conv compute scales nearly linearly there
+NETS = ("DAE", "DSCNN")
+DEFAULT_TARGETS = ("gap9", "ne16_octa")
+N_REQUESTS = 96
+BATCH_SLOTS = 16
+OFFERED_X = 6.0  # offered arrival rate as a multiple of sequential rps
+BUDGET = 300
+GATE_X = 2.0
+
+
+def _io(g, n: int):
+    from repro.cnn import init_graph_params
+
+    params = init_graph_params(g)
+    rng = np.random.default_rng(0)
+    xs = [
+        {k: rng.integers(-128, 128, s).astype("float32") for k, s in g.inputs.items()}
+        for _ in range(n)
+    ]
+    return params, xs
+
+
+def _poisson_round(compiled, params, xs, refs, rate_rps: float) -> dict:
+    import jax
+
+    from repro.serve import ModelServer
+
+    rng = np.random.default_rng(1)
+    with ModelServer(
+        compiled,
+        params,
+        batch_slots=BATCH_SLOTS,
+        stream_depth=2,
+        queue_capacity=len(xs),  # open loop, no shedding: every request
+        # must complete so the bit-exact sweep covers the full set
+    ) as srv:
+        srv.warmup(xs[0])  # AOT batch entry compiles before load arrives
+        # open loop against an absolute Poisson arrival schedule: a slow
+        # submit or sleep never stretches later inter-arrival gaps (the
+        # generator skips sleeping when it is behind schedule), so the
+        # offered rate is honest even when sleep granularity is coarse
+        arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, size=len(xs)))
+        t0 = time.perf_counter()
+        handles = []
+        for x, due in zip(xs, arrivals):
+            delay = t0 + due - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            handles.append(srv.submit(x))
+        outs = [h.result(timeout=300) for h in handles]
+        jax.block_until_ready(outs[-1])
+        span_s = time.perf_counter() - t0
+    for i, out in enumerate(outs):
+        for k in refs[i]:
+            if not np.array_equal(np.asarray(refs[i][k]), np.asarray(out[k])):
+                raise AssertionError(
+                    f"served output diverges from sequential run on request "
+                    f"{i} tensor {k!r}; batch packing broke bit-exactness"
+                )
+    stats = srv.stats()
+    return {
+        "span_s": span_s,
+        "sustained_rps": len(xs) / span_s,
+        "p50_us": stats["latency_us"]["p50"],
+        "p99_us": stats["latency_us"]["p99"],
+        "engine": stats,
+    }
+
+
+def run(target: str = "", repeat: int = 3) -> None:
+    import jax
+
+    from repro.backend import lower
+    from repro.cnn import mlperf_tiny_networks
+    from repro.core import dispatch
+
+    targets = (target,) if target else DEFAULT_TARGETS
+    nets = mlperf_tiny_networks()
+    report: dict[str, dict] = {}
+    best = (0.0, "")
+    for tname in targets:
+        for net in NETS:
+            g = nets[net]
+            mapped = dispatch(g, tname, budget=BUDGET)
+            # fused fidelity: fastest host execution, same segments/plan
+            compiled = lower(mapped, use_pallas=False, band_tiling=False)
+            params, xs = _io(g, N_REQUESTS)
+            compiled.run(params, xs[0])  # jit warmup
+            # sequential baseline; its outputs are the exactness reference
+            refs = []
+            seq_times = []
+            for _ in range(max(1, repeat)):
+                refs = []
+                t0 = time.perf_counter()
+                for x in xs:
+                    refs.append(compiled.run(params, x))
+                jax.block_until_ready(refs[-1])
+                seq_times.append(time.perf_counter() - t0)
+            seq_us = statistics.median(seq_times) / N_REQUESTS * 1e6
+            seq_rps = 1e6 / seq_us if seq_us > 0 else 0.0
+            # offer OFFERED_X times the sequential rate: saturating, not unbounded
+            rounds = [
+                _poisson_round(compiled, params, xs, refs, OFFERED_X * seq_rps)
+                for _ in range(max(1, repeat))
+            ]
+            mid = sorted(rounds, key=lambda r: r["sustained_rps"])[len(rounds) // 2]
+            speedup = mid["sustained_rps"] / seq_rps if seq_rps > 0 else 0.0
+            key = f"serve_{net}_{tname}"
+            emit(f"{key}_seq", seq_us, f"rps={seq_rps:.1f}")
+            emit(
+                f"{key}_load",
+                mid["p50_us"],
+                f"p99={mid['p99_us']:.0f};rps={mid['sustained_rps']:.1f}"
+                f";x{speedup:.2f}",
+            )
+            report[f"{net}_{tname}"] = {
+                "sequential_us_per_req": seq_us,
+                "sequential_rps": seq_rps,
+                "offered_rps": OFFERED_X * seq_rps,
+                "speedup": speedup,
+                **{k: v for k, v in mid.items() if k != "span_s"},
+            }
+            if speedup > best[0]:
+                best = (speedup, f"{net} on {tname}")
+
+    path = os.environ.get("MATCH_SERVE_LOAD", "serve_load.json")
+    with open(path, "w") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+    # only the default sweep carries the regression gate (a pinned target
+    # may be dispatch-dominated and batch poorly); exactness always gates
+    if not target and best[0] < GATE_X:
+        raise AssertionError(
+            f"no (net, target) pair sustains {GATE_X:.1f}x the sequential "
+            f"requests/sec under Poisson load (best {best[0]:.2f}x on "
+            f"{best[1]}); batched serving stopped paying for itself"
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -366,6 +366,40 @@ class CompiledModel:
         never larger."""
         return self.pipeline_schedule().makespan
 
+    def serve_dict(self, stream_requests: int = 4) -> dict:
+        """Request-level serving predictions (:mod:`repro.serve`).
+
+        Steady-state throughput is bounded by the busiest module, not by
+        end-to-end latency: once the pipeline fills, a new request
+        completes every *initiation interval* = max per-module busy
+        cycles.  ``stream`` carries the unit-weight
+        :func:`~repro.pipeline.schedule.schedule_stream` numbers for
+        ``stream_requests`` concurrent requests — the quantity
+        ``dispatch(..., objective="wct")`` re-ranks segmentations by.
+        ``engine`` is the live :class:`~repro.serve.engine.ModelServer`
+        stats when a replica has served this model (else ``None``).
+        """
+        from repro.pipeline.schedule import schedule_stream  # no cycle: late
+
+        ps = self.pipeline_schedule()
+        busy = ps.module_busy()
+        ii = max(busy.values()) if busy else ps.makespan
+        ss = schedule_stream(self.mapped, (1.0,) * max(1, stream_requests))
+        f = self.target.fallback.frequency_hz
+        return {
+            "initiation_interval_cycles": ii,
+            "bottleneck_module": max(busy, key=busy.get) if busy else None,
+            "predicted_requests_per_s": (f / ii) if ii > 0 else 0.0,
+            "predicted_stream_speedup": (ps.makespan / ii) if ii > 0 else 1.0,
+            "stream": {
+                "requests": int(max(1, stream_requests)),
+                "makespan_cycles": ss.makespan,
+                "weighted_completion_cycles": ss.attrs["weighted_completion"],
+                "request_order": list(ss.attrs["request_order"]),
+            },
+            "engine": self.attrs.get("serve"),
+        }
+
     def report_dict(self) -> dict:
         """Machine-readable companion of :meth:`report`: predicted cycles,
         memory plan, and any measured timings in one JSON-safe payload —
@@ -406,6 +440,10 @@ class CompiledModel:
             # Gantt-style concurrent schedule (repro.pipeline): per-module
             # lanes with start/finish plus the predicted makespan
             "pipeline": self.pipeline_schedule().timeline_dict(),
+            # request-level serving (PR 8): steady-state initiation
+            # interval + stream WCT predictions, and live replica stats
+            # once a repro.serve.ModelServer has served this model
+            "serve": self.serve_dict(),
             # process-wide observability snapshot (PR 7): metric registry
             # plus this target's predicted-vs-measured drift aggregates
             "obs": {

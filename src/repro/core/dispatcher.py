@@ -305,6 +305,12 @@ class _State:
 # still on the table, small enough that scheduling them all is free
 _FINALS_KEPT = 64
 
+# requests in the synthetic unit-weight stream the "wct" objective prices
+# each candidate segmentation against: deep enough that the steady-state
+# initiation interval dominates (C_k ~ makespan + (k-1)*II, so the sum
+# weighs II (depth-1)/2 times per request), shallow enough to stay free
+_WCT_STREAM_DEPTH = 4
+
 
 def _dispatch_dp(
     graph: Graph,
@@ -357,7 +363,7 @@ def _dispatch_dp(
     # exactly one survivor — the makespan objective needs the runners-up.
     # Under objective="cycles" only the running minimum is kept (no
     # signature bookkeeping in the DP hot loop).
-    track_finals = objective == "makespan"
+    track_finals = objective in ("makespan", "wct")
     finals: dict[tuple, _State] = {}
     best_final: _State | None = None
 
@@ -409,25 +415,42 @@ def _dispatch_dp(
     )
 
     attrs = {"policy": "dp", "objective": objective, "planner_stats": dict(planner.stats)}
-    if objective == "makespan":
-        # re-rank the surviving complete segmentations by their scheduled
-        # concurrent makespan (ties broken by the cycle sum, so chains
-        # with no overlap opportunity reproduce the cycles objective)
-        from repro.pipeline.schedule import schedule_pipeline  # no cycle: late
+    if track_finals:
+        # re-rank the surviving complete segmentations by a schedule-level
+        # objective: "makespan" scores the concurrent single-input
+        # schedule; "wct" scores the weighted completion time of a
+        # unit-weight request stream (repro.pipeline.schedule_stream), so
+        # a serving-friendly segmentation — one whose steady-state
+        # initiation interval, not just its latency, is small — wins.
+        # Ties fall back to makespan then the cycle sum, so chains with
+        # no overlap opportunity reproduce the cycles objective.
+        from repro.pipeline.schedule import (  # no cycle: late import
+            schedule_pipeline,
+            schedule_stream,
+        )
 
         with obs.span("dispatch.makespan_rerank", cat="compile") as sp:
             ranked = sorted(finals.values(), key=lambda s: s.cost)[:_FINALS_KEPT]
             best: _State | None = None
-            best_key: tuple[float, float] | None = None
+            best_key: tuple[float, ...] | None = None
+            best_span: float = 0.0
             for st in ranked:
-                ps = schedule_pipeline(MappedGraph(graph, target, list(st.segments)))
-                key = (ps.makespan, st.cost)
+                mg = MappedGraph(graph, target, list(st.segments))
+                ps = schedule_pipeline(mg)
+                if objective == "wct":
+                    ss = schedule_stream(mg, (1.0,) * _WCT_STREAM_DEPTH)
+                    key = (ss.attrs["weighted_completion"], ps.makespan, st.cost)
+                else:
+                    key = (ps.makespan, st.cost)
                 if best_key is None or key < best_key:
-                    best, best_key = st, key
+                    best, best_key, best_span = st, key, ps.makespan
             final = best
-            sp.set(candidates=len(ranked), makespan=best_key[0])
-        attrs["predicted_makespan"] = best_key[0]
+            sp.set(candidates=len(ranked), makespan=best_span)
+        attrs["predicted_makespan"] = best_span
         attrs["candidates_reranked"] = len(ranked)
+        if objective == "wct":
+            attrs["predicted_weighted_completion"] = best_key[0]
+            attrs["wct_stream_depth"] = _WCT_STREAM_DEPTH
     else:
         final = best_final
     if verbose:
@@ -555,6 +578,11 @@ def dispatch(
     module a resource with its own clock), so independent branches are
     worth spreading across modules.  Ties fall back to the cycle sum,
     which keeps skipless chains identical under both objectives.
+    ``"wct"`` extends the makespan re-rank to *serving*: candidates are
+    scored by the weighted completion time of a unit-weight request
+    stream (:func:`repro.pipeline.schedule.schedule_stream`), which
+    prices the steady-state initiation interval on top of the one-shot
+    latency — the segmentation a loaded replica should run.
     ``planner`` / ``cache_path`` control schedule batching and the
     persistent DSE cache (see :class:`~repro.core.loma.SchedulePlanner`).
     ``profile`` applies a :class:`~repro.calibrate.CalibrationProfile`
@@ -591,7 +619,7 @@ def dispatch(
                 f"not {target.name!r}"
             )
         target = apply_profile(target, prof)
-    if objective not in ("cycles", "makespan"):
+    if objective not in ("cycles", "makespan", "wct"):
         raise ValueError(f"unknown dispatch objective {objective!r}")
     if policy == "greedy":
         if planner is not None or cache_path is not None:

@@ -22,6 +22,7 @@ from .schedule import (
     PipelineScheduleError,
     ScheduledSegment,
     schedule_pipeline,
+    schedule_stream,
     segment_deps,
 )
 from .runtime import PipelinedModel
@@ -32,5 +33,6 @@ __all__ = [
     "PipelinedModel",
     "ScheduledSegment",
     "schedule_pipeline",
+    "schedule_stream",
     "segment_deps",
 ]

@@ -41,6 +41,7 @@ __all__ = [
     "PipelineScheduleError",
     "ScheduledSegment",
     "schedule_pipeline",
+    "schedule_stream",
     "segment_deps",
 ]
 
@@ -279,4 +280,106 @@ def schedule_pipeline(mapped: MappedGraph) -> PipelineSchedule:
         entries=entries,
         makespan=max(finish, default=0.0),
         attrs={"policy": "list-topo"},
+    )
+
+
+def schedule_stream(
+    mapped: MappedGraph,
+    weights: tuple[float, ...] | list[float] = (1.0,),
+    *,
+    order: str = "smith",
+) -> PipelineSchedule:
+    """Schedule a *stream* of requests through the pipeline, minimising
+    weighted completion time instead of single-input makespan.
+
+    ``weights`` gives one priority weight per request (all requests run
+    the same graph, so every job has identical processing time).  Under
+    ``order="smith"`` requests enter the per-module lanes in
+    weight-descending order — Smith's rule, optimal for
+    ``1 | | sum w_j C_j`` with identical jobs — so a high-priority
+    request jumps the lane order of every module without ever violating
+    happens-before: its own segment dependencies still gate each start,
+    and the schedule stays a valid :class:`PipelineSchedule`
+    (``validate()`` checks both).  ``order="fifo"`` keeps arrival order,
+    the baseline the serving tests compare against.
+
+    The result's ``attrs`` carry the serving-side economics:
+    ``completion`` (per-request completion cycles, keyed by the original
+    request position), ``weighted_completion`` (``sum w_r * C_r`` — the
+    quantity ``dispatch(..., objective="wct")`` re-ranks segmentations
+    by), and ``request_order`` (the lane order chosen).  With one
+    unit-weight request this reproduces :func:`schedule_pipeline`'s
+    makespan bit for bit (same float accumulations in the same order).
+    """
+    if order not in ("smith", "fifo"):
+        raise ValueError(f"unknown stream order {order!r} (smith | fifo)")
+    ws = [float(w) for w in weights]
+    if not ws:
+        raise ValueError("schedule_stream needs at least one request weight")
+    if any(w < 0 for w in ws):
+        raise ValueError(f"request weights must be >= 0, got {ws}")
+    if order == "smith":
+        # identical processing times: Smith's w/p ratio collapses to the
+        # weight; arrival position breaks ties so equal-priority requests
+        # keep FIFO fairness
+        req_order = sorted(range(len(ws)), key=lambda r: (-ws[r], r))
+    else:
+        req_order = list(range(len(ws)))
+
+    segments = mapped.segments
+    deps = segment_deps(mapped)
+    entries: list[ScheduledSegment] = []
+    finish: dict[tuple[int, int], float] = {}
+    gidx: dict[tuple[int, int], int] = {}
+    module_free: dict[str, float] = {}
+    module_last: dict[str, int] = {}
+    completion: dict[int, float] = {}
+    for r in req_order:
+        done_r = 0.0
+        for i, seg in enumerate(segments):
+            ready = 0.0
+            blocker: int | None = None
+            prev = module_last.get(seg.module)
+            if prev is not None:
+                ready = module_free[seg.module]
+                blocker = prev
+            for d in deps[i]:
+                if finish[(r, d)] > ready:
+                    ready = finish[(r, d)]
+                    blocker = gidx[(r, d)]
+            fin = ready + seg.total_cycles
+            gi = len(entries)
+            finish[(r, i)] = fin
+            gidx[(r, i)] = gi
+            module_free[seg.module] = fin
+            module_last[seg.module] = gi
+            done_r = max(done_r, fin)
+            entries.append(
+                ScheduledSegment(
+                    index=gi,
+                    name=f"{seg.anchor.name}@r{r}",
+                    module=seg.module,
+                    start=ready,
+                    transfer_cycles=seg.transfer_cycles,
+                    compute_cycles=seg.cycles,
+                    finish=fin,
+                    deps=tuple(gidx[(r, d)] for d in deps[i]),
+                    blocker=blocker,
+                )
+            )
+        completion[r] = done_r
+    return PipelineSchedule(
+        graph_name=f"{mapped.graph.name}x{len(ws)}",
+        target_name=mapped.target.name,
+        entries=entries,
+        makespan=max(finish.values(), default=0.0),
+        attrs={
+            "policy": f"stream-{order}",
+            "weights": ws,
+            "request_order": req_order,
+            "completion": {str(r): c for r, c in sorted(completion.items())},
+            "weighted_completion": sum(
+                ws[r] * completion[r] for r in range(len(ws))
+            ),
+        },
     )

@@ -1,0 +1,35 @@
+"""repro.serve — request-level serving over the compiled pipeline.
+
+PR 5 made one *input stream* fast; this package makes many *users*
+fast.  A :class:`ModelServer` replica fronts a ``CompiledModel`` with:
+
+* :class:`AdmissionQueue` — a bounded priority queue (reject /
+  backpressure policies) so heavy traffic sheds at the door instead of
+  growing an unbounded buffer;
+* :class:`BatchedModel` — cross-request batch packing by vmapping the
+  fused segment executors over a slot axis, one AOT-compiled executable
+  per batch shape, per-request outputs bit-exact with sequential
+  ``CompiledModel.run``;
+* priority/deadline-aware rounds whose lane order is the
+  :func:`repro.pipeline.schedule.schedule_stream` Smith order, checked
+  by the existing ``PipelineSchedule.validate()``;
+* per-request spans on the ``serve:<replica>`` lane plus ``serve.*``
+  metrics, with replica stats in ``report_dict()["serve"]``.
+
+The LM token-serving loop (continuous batching over prefill/decode)
+lives in :mod:`repro.serving`; this package serves whole-graph
+requests (one inference per request) over any compiled target.
+"""
+
+from .batching import BatchedModel
+from .engine import ModelServer
+from .queue import AdmissionQueue, QueueFullError, ServeHandle, ServeRequest
+
+__all__ = [
+    "AdmissionQueue",
+    "BatchedModel",
+    "ModelServer",
+    "QueueFullError",
+    "ServeHandle",
+    "ServeRequest",
+]

@@ -1,0 +1,164 @@
+"""Cross-request batch packing: vmap the fused segment executors.
+
+One compiled schedule serves ``B`` concurrent users by stacking their
+inputs along a leading *slot* axis and mapping every
+:class:`~repro.backend.lower.LoweredSegment` executor over it with
+``jax.vmap`` — the per-example shapes inside each executor are exactly
+the unbatched ones, so the winning LOMA tiles, the fused epilogues and
+the memory plan all apply unchanged, and per-request outputs stay
+bit-exact with running ``CompiledModel.run`` one request at a time
+(held by tests/test_serve.py and the serve_load benchmark gate).
+
+Two execution surfaces:
+
+* :meth:`BatchedModel.batched_segments` — vmapped per-segment executors
+  (same ``LoweredSegment`` dataclass, batched ``fn``), which is what a
+  batched :class:`~repro.pipeline.runtime.PipelinedModel` runs for
+  module-concurrent streaming;
+* :meth:`BatchedModel.run_batch` — the whole batched graph fused into
+  ONE AOT-compiled executable per batch shape (the PR 6 follow-up:
+  ``jax.jit(...).lower().compile()`` with params baked as constants,
+  cached per ``(params identity, stacked input signature)``), so a
+  steady-state replica pays one host dispatch per batch of users.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import TYPE_CHECKING, Sequence
+
+import jax
+
+from repro import obs
+
+if TYPE_CHECKING:  # repro.backend stays import-light; duck-typed at runtime
+    from repro.backend.lower import LoweredSegment
+    from repro.backend.runtime import CompiledModel
+
+__all__ = ["BatchedModel"]
+
+
+class BatchedModel:
+    """A CompiledModel's executors vmapped over a request-slot axis."""
+
+    def __init__(self, compiled: "CompiledModel"):
+        self.compiled = compiled
+        self._batched_segments: list["LoweredSegment"] | None = None
+        # (params id, input signature) -> (params ref, compiled executable,
+        # stats row); the strong params ref keeps id() stable, mirroring
+        # PipelinedModel._chain_cache
+        self._entries: dict[tuple, tuple[dict, object, dict]] = {}
+        self._lock = threading.Lock()
+
+    @property
+    def graph(self):
+        return self.compiled.graph
+
+    # -- vmapped per-segment executors ----------------------------------
+    def batched_segments(self) -> list["LoweredSegment"]:
+        """Per-segment executors accepting ``(B, ...)``-stacked operands.
+
+        Params stay unbatched (``in_axes`` None): every slot shares the
+        one model, exactly like rows of a serving batch share weights.
+        """
+        if self._batched_segments is None:
+            segs = []
+            for ls in self.compiled.segments:
+                vfn = jax.vmap(
+                    ls.fn, in_axes=(None,) + (0,) * len(ls.input_names)
+                )
+                segs.append(dataclasses.replace(ls, fn=vfn))
+            self._batched_segments = segs
+        return self._batched_segments
+
+    # -- stacking -------------------------------------------------------
+    def stack(self, inputs_list: Sequence[dict]) -> dict:
+        """Stack per-request input dicts along a new leading slot axis."""
+        from repro.backend.runtime import as_input_array
+
+        if not inputs_list:
+            raise ValueError("cannot stack an empty batch")
+        keys = self.graph.inputs.keys()
+        return {
+            k: jax.numpy.stack([as_input_array(x[k]) for x in inputs_list])
+            for k in keys
+        }
+
+    @staticmethod
+    def unstack(outputs: dict, n: int) -> list[dict]:
+        """Split stacked graph outputs back into per-request dicts.
+
+        Rows are numpy views over one host transfer per output tensor —
+        per-row device slicing would cost ``n`` tiny dispatches per
+        tensor, which at serving rates dwarfs the compute itself."""
+        import numpy as np
+
+        host = {k: np.asarray(v) for k, v in outputs.items()}
+        return [{k: v[i] for k, v in host.items()} for i in range(n)]
+
+    # -- one AOT entry per batch shape ----------------------------------
+    def _signature(self, stacked: dict) -> tuple:
+        return tuple(
+            (k, tuple(v.shape), str(v.dtype)) for k, v in sorted(stacked.items())
+        )
+
+    def entry(self, params: dict, stacked: dict):
+        """The AOT-compiled whole-batched-graph executable for this
+        ``(params, batch shape)`` signature, built on first use."""
+        sig = (id(params), self._signature(stacked))
+        with self._lock:
+            hit = self._entries.get(sig)
+            if hit is not None and hit[0] is params:
+                obs.counter("serve.entry_hits").inc()
+                return hit[1]
+        segs = self.batched_segments()
+        outputs = self.graph.outputs
+        input_names = tuple(self.graph.inputs.keys())
+
+        def whole_batch(batch_inputs: dict) -> dict:
+            env = dict(batch_inputs)
+            for ls in segs:
+                env[ls.output_name] = ls.fn(
+                    ls.params_slice(params), *[env[nm] for nm in ls.input_names]
+                )
+            return {o: env[o] for o in outputs}
+
+        t0 = time.perf_counter()
+        lowered = jax.jit(whole_batch).lower(
+            {k: stacked[k] for k in input_names}
+        )
+        t1 = time.perf_counter()
+        executable = lowered.compile()
+        t2 = time.perf_counter()
+        obs.counter("serve.entry_misses").inc()
+        row = {
+            "batch": int(next(iter(stacked.values())).shape[0]),
+            "signature": [list(map(str, s)) for s in sig[1]],
+            "trace_us": (t1 - t0) * 1e6,
+            "compile_us": (t2 - t1) * 1e6,
+        }
+        with self._lock:
+            self._entries[sig] = (params, executable, row)
+        return executable
+
+    def run_batch(self, params: dict, inputs_list: Sequence[dict]) -> list[dict]:
+        """Serve ``inputs_list`` as one packed batch (one host dispatch);
+        returns per-request output dicts, row ``i`` bit-exact with
+        ``CompiledModel.run(params, inputs_list[i])``."""
+        stacked = self.stack(inputs_list)
+        outs = self.entry(params, stacked)(stacked)
+        return self.unstack(outs, len(inputs_list))
+
+    def run_batch_async(self, params: dict, inputs_list: Sequence[dict]):
+        """Dispatch a packed batch without blocking: returns the stacked
+        output dict (jax arrays still materialising on device) — the
+        server's in-flight window blocks on them in completion order."""
+        stacked = self.stack(inputs_list)
+        return self.entry(params, stacked)(stacked)
+
+    def entry_stats(self) -> list[dict]:
+        """JSON-safe trace/compile cost per AOT batch entry."""
+        with self._lock:
+            return [dict(row) for (_, _, row) in self._entries.values()]

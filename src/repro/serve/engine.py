@@ -1,0 +1,353 @@
+"""ModelServer: request-level serving over a compiled pipeline.
+
+Fuses the two halves of ROADMAP item 1 — the seed slot-batching idea
+from ``repro.serving`` and PR 5's software-pipelined runtime — into one
+replica loop:
+
+* an :class:`~repro.serve.queue.AdmissionQueue` bounds waiting work
+  (reject/backpressure) and pops in Smith's-rule priority order, the
+  same order :func:`repro.pipeline.schedule.schedule_stream` proves
+  valid (every round's stream schedule is re-built from the round's
+  actual priorities and ``validate()``-checked, so priority jumps never
+  violate happens-before);
+* :class:`~repro.serve.batching.BatchedModel` packs up to
+  ``batch_slots`` requests into one vmapped execution, with one
+  AOT-compiled executable per batch shape;
+* batches flow through an in-flight window of ``stream_depth`` —
+  literally :meth:`PipelinedModel.run_stream` in ``mode="pipeline"``
+  (one worker thread per execution module, admission events bounding
+  in-flight inputs), or ``stream_depth`` asynchronously dispatched AOT
+  batches in ``mode="aot"`` (the fastest host path);
+* every request gets a span on the ``serve:<replica>`` trace lane and
+  feeds the ``serve.*`` metrics (`queue_depth`, `rejected`,
+  `latency_us`, `p99_us`) that ship in ``report_dict()["obs"]``; the
+  replica's aggregate stats land in ``report_dict()["serve"]``.
+
+Bit-exactness: a served output is the vmapped row of the same fused
+executors ``CompiledModel.run`` calls — held per-request by
+tests/test_serve.py and enforced under load by benchmarks/serve_load.py.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from collections import deque
+from typing import TYPE_CHECKING
+
+import jax
+
+from repro import obs
+
+from .batching import BatchedModel
+from .queue import AdmissionQueue, QueueFullError, ServeHandle, ServeRequest
+
+if TYPE_CHECKING:
+    from repro.backend.runtime import CompiledModel
+
+__all__ = ["ModelServer"]
+
+# how long the serving loop waits on an empty queue before re-checking
+# for shutdown; bounds close() latency, not request latency (a waiting
+# take() wakes immediately on submit)
+_IDLE_WAIT_S = 0.05
+
+
+class ModelServer:
+    """One serving replica over a ``CompiledModel`` and fixed params.
+
+    ``batch_slots`` requests share one vmapped execution;
+    ``stream_depth`` batches may be in flight at once; ``queue_capacity``
+    + ``policy`` ("reject" | "block") set the admission valve.
+    ``mode="aot"`` (default) runs one AOT batch executable per round
+    entry; ``mode="pipeline"`` runs batches through a batched
+    :class:`~repro.pipeline.runtime.PipelinedModel.run_stream` so
+    execution modules overlap *within* each batch too.
+    """
+
+    def __init__(
+        self,
+        compiled: "CompiledModel",
+        params: dict,
+        *,
+        batch_slots: int = 4,
+        stream_depth: int = 2,
+        queue_capacity: int = 64,
+        policy: str = "reject",
+        mode: str = "aot",
+        replica: str = "r0",
+        pad_to_slots: bool = True,
+        timeout_s: float = 600.0,
+    ):
+        if batch_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
+        if stream_depth < 1:
+            raise ValueError(f"stream_depth must be >= 1, got {stream_depth}")
+        if mode not in ("aot", "pipeline"):
+            raise ValueError(f"unknown serve mode {mode!r} (aot | pipeline)")
+        self.compiled = compiled
+        self.params = params
+        self.batch_slots = int(batch_slots)
+        self.stream_depth = int(stream_depth)
+        self.mode = mode
+        self.replica = replica
+        # pad partial groups to batch_slots (rows repeat the last
+        # request): every batch then shares ONE AOT entry shape, trading
+        # a little wasted vmap compute for zero mid-load recompiles
+        self.pad_to_slots = bool(pad_to_slots)
+        self.timeout_s = float(timeout_s)
+        self.batched = BatchedModel(compiled)
+        self.queue = AdmissionQueue(queue_capacity, policy)
+        self._rids = itertools.count()
+        self._thread: threading.Thread | None = None
+        self._start_lock = threading.Lock()
+        self._pipelined = None
+        # per-replica aggregates (the process-wide serve.* metrics are
+        # shared across replicas; stats() must stay attributable)
+        self._submitted = 0
+        self._completed = 0
+        self._rejected = 0
+        self._deadline_misses = 0
+        self._rounds = 0
+        self._batches = 0
+        self._lat_window: deque[float] = deque(maxlen=512)
+        self._last_round: dict = {}
+
+    # -- lifecycle -------------------------------------------------------
+    def start(self) -> "ModelServer":
+        with self._start_lock:
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._loop, daemon=True, name=f"serve-{self.replica}"
+                )
+                self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop admitting, drain everything queued, join the loop, and
+        stamp the final stats into ``compiled.attrs["serve"]``."""
+        self.queue.close()
+        t = self._thread
+        if t is not None:
+            t.join(self.timeout_s)
+        self._stamp()
+
+    def warmup(self, example_inputs: dict) -> "ModelServer":
+        """Trace + compile the full-batch AOT entry (and the pipeline
+        clone's jit chains) before load arrives, so the first round pays
+        no compilation.  ``example_inputs`` is one request's input dict;
+        the result is discarded."""
+        batch = [example_inputs] * self.batch_slots
+        if self.mode == "pipeline":
+            self._pipelined_model().run(self.params, self.batched.stack(batch))
+        else:
+            self.batched.run_batch(self.params, batch)
+        return self
+
+    def __enter__(self) -> "ModelServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- client side -----------------------------------------------------
+    def submit(
+        self,
+        inputs: dict,
+        *,
+        priority: float = 1.0,
+        deadline_us: float | None = None,
+    ) -> ServeHandle:
+        """Admit one request; returns its :class:`ServeHandle`.
+
+        ``priority`` is the Smith weight (higher jumps the lane order);
+        ``deadline_us`` is relative to now — a completion past it counts
+        as a miss in the stats, it does not cancel the request.  Raises
+        :class:`QueueFullError` past the admission bound under
+        ``policy="reject"``.
+        """
+        self.start()
+        now = obs.get_tracer().now_us()
+        req = ServeRequest(
+            rid=next(self._rids),
+            inputs=inputs,
+            priority=float(priority),
+            deadline_us=None if deadline_us is None else now + float(deadline_us),
+            arrival_us=now,
+        )
+        req.handle = ServeHandle(req.rid)
+        obs.counter("serve.submitted").inc()
+        self._submitted += 1
+        try:
+            self.queue.put(req, timeout=self.timeout_s)
+        except QueueFullError:
+            self._rejected += 1
+            raise
+        return req.handle
+
+    # -- serving loop ----------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            reqs = self.queue.take(
+                self.batch_slots * self.stream_depth, timeout=_IDLE_WAIT_S
+            )
+            if not reqs:
+                if self.queue.closed:
+                    return
+                continue
+            try:
+                self._serve_round(reqs)
+            except BaseException as e:  # resolve, don't kill the replica
+                for r in reqs:
+                    if not r.handle.done():
+                        r.handle._future.set_exception(e)
+
+    def _serve_round(self, reqs: list[ServeRequest]) -> None:
+        # the round's stream schedule: requests in the queue's pop order
+        # with their real weights — Smith order by construction, and
+        # validate() proves priority jumps never break happens-before or
+        # per-module serialisation
+        from repro.pipeline.schedule import schedule_stream
+
+        ss = schedule_stream(
+            self.compiled.mapped, [r.priority for r in reqs], order="smith"
+        )
+        ss.validate()
+        self._rounds += 1
+        self._last_round = {
+            "requests": len(reqs),
+            "rids": [r.rid for r in reqs],
+            "weighted_completion_cycles": ss.attrs["weighted_completion"],
+            "makespan_cycles": ss.makespan,
+        }
+        groups = [
+            reqs[i : i + self.batch_slots]
+            for i in range(0, len(reqs), self.batch_slots)
+        ]
+        self._batches += len(groups)
+        if self.mode == "pipeline":
+            self._serve_pipelined(groups)
+        else:
+            self._serve_aot(groups)
+        self._stamp()
+
+    def _serve_aot(self, groups: list[list[ServeRequest]]) -> None:
+        """One AOT batch executable per group, ``stream_depth`` batches
+        asynchronously in flight (jax dispatch returns before the device
+        finishes; blocking happens in completion order)."""
+        inflight: deque[tuple[list[ServeRequest], dict]] = deque()
+        for g in groups:
+            if len(inflight) >= self.stream_depth:
+                self._finish(*inflight.popleft())
+            outs = self.batched.run_batch_async(self.params, self._padded(g))
+            inflight.append((g, outs))
+        while inflight:
+            self._finish(*inflight.popleft())
+
+    def _padded(self, g: list[ServeRequest]) -> list[dict]:
+        inputs = [r.inputs for r in g]
+        if self.pad_to_slots and len(inputs) < self.batch_slots:
+            inputs = inputs + [inputs[-1]] * (self.batch_slots - len(inputs))
+        return inputs
+
+    def _serve_pipelined(self, groups: list[list[ServeRequest]]) -> None:
+        """Feed stacked batches through ``PipelinedModel.run_stream`` —
+        module-concurrent within a batch, software-pipelined across
+        batches, at most ``stream_depth`` in flight (PR 5 admission)."""
+        pm = self._pipelined_model()
+        stacked = [self.batched.stack(self._padded(g)) for g in groups]
+        outs = pm.run_stream(self.params, stacked)
+        for g, out in zip(groups, outs):
+            self._resolve(g, out)
+
+    def _pipelined_model(self):
+        if self._pipelined is None:
+            import dataclasses
+
+            from repro.pipeline.runtime import PipelinedModel
+
+            # a shallow clone whose executors take (B, ...) operands: the
+            # vmapped fns are batch-size-agnostic, so one PipelinedModel
+            # serves every group size.  Memory validation stays on the
+            # unbatched model — the slot axis multiplies the true
+            # footprint by B, which the single-slot plan does not claim
+            # to bound (stats() records batch_slots for capacity math).
+            clone = dataclasses.replace(
+                self.compiled, segments=self.batched.batched_segments()
+            )
+            self._pipelined = PipelinedModel(
+                clone,
+                stream_depth=self.stream_depth,
+                validate_memory=False,
+                timeout_s=self.timeout_s,
+            )
+        return self._pipelined
+
+    def _finish(self, g: list[ServeRequest], outs: dict) -> None:
+        jax.block_until_ready(outs)
+        self._resolve(g, outs)
+
+    def _resolve(self, g: list[ServeRequest], stacked_outs: dict) -> None:
+        tracer = obs.get_tracer()
+        rows = BatchedModel.unstack(stacked_outs, len(g))
+        now = tracer.now_us()
+        lat_hist = obs.histogram("serve.latency_us")
+        for r, out in zip(g, rows):
+            r.handle._future.set_result(out)
+            lat = now - r.arrival_us
+            lat_hist.observe(lat)
+            self._lat_window.append(lat)
+            self._completed += 1
+            obs.counter("serve.completed").inc()
+            if r.deadline_us is not None and now > r.deadline_us:
+                self._deadline_misses += 1
+                obs.counter("serve.deadline_misses").inc()
+            tracer.complete(
+                f"req{r.rid}",
+                r.arrival_us,
+                cat="serve",
+                lane=f"serve:{self.replica}",
+                attrs={"rid": r.rid, "priority": r.priority, "batch": len(g)},
+            )
+        obs.gauge("serve.p99_us").set(self._quantile(0.99))
+
+    # -- reporting -------------------------------------------------------
+    def _quantile(self, q: float) -> float:
+        if not self._lat_window:
+            return 0.0
+        xs = sorted(self._lat_window)
+        return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+    def stats(self) -> dict:
+        """JSON-safe per-replica serving stats (also stamped into
+        ``compiled.attrs["serve"]`` → ``report_dict()["serve"]["engine"]``)."""
+        return {
+            "replica": self.replica,
+            "mode": self.mode,
+            "batch_slots": self.batch_slots,
+            "stream_depth": self.stream_depth,
+            "queue_capacity": self.queue.capacity,
+            "policy": self.queue.policy,
+            "submitted": self._submitted,
+            "completed": self._completed,
+            "rejected": self._rejected,
+            "deadline_misses": self._deadline_misses,
+            "rounds": self._rounds,
+            "batches": self._batches,
+            "queue_depth": self.queue.depth,
+            "latency_us": {
+                "count": len(self._lat_window),
+                "p50": self._quantile(0.50),
+                "p99": self._quantile(0.99),
+                "mean": (
+                    sum(self._lat_window) / len(self._lat_window)
+                    if self._lat_window
+                    else 0.0
+                ),
+            },
+            "last_round": dict(self._last_round),
+            "entries": self.batched.entry_stats(),
+        }
+
+    def _stamp(self) -> None:
+        self.compiled.attrs["serve"] = self.stats()

@@ -6,12 +6,20 @@
 * Finished slots are refilled from the queue between decode steps
   (continuous batching without paged attention — cache slots are
   per-batch-row, so a new request reuses a finished row by re-prefilling
-  its row into the shared cache via the single-row prefill path).
+  its row into the shared cache via the single-row prefill path).  A
+  queued prompt longer than the batch's current position cannot join
+  lock-step mid-flight; it parks in ``_pending`` and opens the next
+  batch instead.
+* A request that hits ``max_len`` before ``max_new_tokens`` is returned
+  with ``truncated=True`` and a :class:`TruncationWarning` (silently
+  under-producing tokens is how decode bugs hide).
 * Greedy or temperature sampling.
 
 This is the serving driver used by the decode/long-context dry-run
 cells; at pod scale the same engine runs under pjit with the
 autosharded rules (weights TP/EP-sharded, cache batch-sharded).
+Request-level (whole-graph, non-autoregressive) serving lives in
+:mod:`repro.serve`.
 """
 
 from __future__ import annotations
@@ -24,8 +32,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import LM
+from repro.obs.log import MatchWarning
+from repro.obs.log import warn as obs_warn
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "TruncationWarning"]
+
+
+class TruncationWarning(MatchWarning):
+    """A request ran out of cache headroom (``pos >= max_len``) before
+    producing ``max_new_tokens``; its ``truncated`` flag is set."""
 
 
 @dataclass
@@ -36,6 +51,7 @@ class Request:
     temperature: float = 0.0
     out_tokens: list[int] = field(default_factory=list)
     done: bool = False
+    truncated: bool = False
 
 
 class ServeEngine:
@@ -54,24 +70,94 @@ class ServeEngine:
         self.max_len = max_len
         self.rng = np.random.default_rng(rng_seed)
         self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._pending: list[Request] = []  # popped but not yet slotted
         self._decode = jax.jit(model.decode_step)
+        # serving counters: decode iterations paid and slots recycled —
+        # the refill regression test pins their relationship
+        self.decode_steps = 0
+        self.refills = 0
 
     def submit(self, req: Request) -> None:
         self._queue.put(req)
 
+    def _pop(self) -> Request | None:
+        """One queued request, or None — never empty()-then-get(): with
+        concurrent submitters the queue can drain between the two calls,
+        and get() would then block forever."""
+        try:
+            return self._queue.get_nowait()
+        except queue.Empty:
+            return None
+
     def _take_batch(self) -> list[Request]:
-        out = []
-        while len(out) < self.batch_slots and not self._queue.empty():
-            out.append(self._queue.get())
+        out = self._pending[: self.batch_slots]
+        del self._pending[: len(out)]
+        while len(out) < self.batch_slots:
+            r = self._pop()
+            if r is None:
+                break
+            out.append(r)
         return out
+
+    def _next_fitting(self, pos: int) -> Request | None:
+        """A waiting request whose prompt fits the lock-step position
+        (left-padded to width ``pos``); longer prompts park in
+        ``_pending`` for the next batch."""
+        for j, r in enumerate(self._pending):
+            if len(r.prompt) <= pos:
+                return self._pending.pop(j)
+        while True:
+            r = self._pop()
+            if r is None:
+                return None
+            if len(r.prompt) <= pos:
+                return r
+            self._pending.append(r)
 
     def run(self) -> list[Request]:
         """Serve everything currently queued; returns finished requests."""
         finished: list[Request] = []
-        while not self._queue.empty():
+        while True:
             batch = self._take_batch()
+            if not batch:
+                return finished
             finished.extend(self._serve_batch(batch))
-        return finished
+
+    # -- single-row prefill path (slot refill) --------------------------
+    def _merge_row(self, cache, row_cache, i: int):
+        """Write ``row_cache`` (batch 1) into row ``i`` of the shared
+        cache.  Batch rows are independent everywhere except the
+        position-count leaves, which carry no batch axis and agree by
+        construction (both covers span positions ``0..pos-1``)."""
+        axes = self.model.cache_axes()
+        leaves, treedef = jax.tree_util.tree_flatten(cache)
+        row_leaves = jax.tree_util.tree_leaves(row_cache)
+        ax_leaves = jax.tree_util.tree_leaves(
+            axes, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        merged = []
+        for leaf, row_leaf, ax in zip(leaves, row_leaves, ax_leaves):
+            if "batch" in ax:
+                b = ax.index("batch")
+                src = jnp.take(row_leaf, 0, axis=b)
+                merged.append(leaf.at[(slice(None),) * b + (i,)].set(src))
+            else:
+                merged.append(leaf)
+        return jax.tree_util.tree_unflatten(treedef, merged)
+
+    def _refill_slot(self, req: Request, i: int, pos: int, cache):
+        """Prefill ``req`` as a single row (left-padded to the lock-step
+        width ``pos``), splice it into slot ``i``, and return its first
+        sampled token plus the updated cache."""
+        row = np.zeros((1, pos), np.int32)
+        row[0, pos - len(req.prompt) :] = req.prompt
+        logits, row_cache = self.model.prefill(
+            self.params, jnp.asarray(row), max_len=self.max_len
+        )
+        cache = self._merge_row(cache, row_cache, i)
+        tok = int(self._sample(logits, [req])[0])
+        self.refills += 1
+        return tok, cache
 
     def _serve_batch(self, reqs: list[Request]) -> list[Request]:
         B = len(reqs)
@@ -86,31 +172,59 @@ class ServeEngine:
             self.params, jnp.asarray(toks), max_len=self.max_len
         )
         pos = plen
+        slots = list(reqs)
         live = [True] * B
-        cur = self._sample(logits, reqs)
-        for i, r in enumerate(reqs):
+        served: list[Request] = []
+        cur = self._sample(logits, slots)
+        for i, r in enumerate(slots):
             r.out_tokens.append(int(cur[i]))
 
-        max_new = max(r.max_new_tokens for r in reqs)
-        for step in range(1, max_new):
+        while True:
+            # retire finished slots and refill them from the queue before
+            # paying the next lock-step decode; fixpoint, because a
+            # refilled request can itself already be satisfied
+            changed = True
+            while changed:
+                changed = False
+                for i, r in enumerate(slots):
+                    if live[i] and len(r.out_tokens) >= r.max_new_tokens:
+                        live[i] = False
+                        r.done = True
+                        served.append(r)
+                        changed = True
+                        if pos < self.max_len:
+                            nxt = self._next_fitting(pos)
+                            if nxt is not None:
+                                tok, cache = self._refill_slot(nxt, i, pos, cache)
+                                slots[i] = nxt
+                                live[i] = True
+                                cur[i] = tok
+                                nxt.out_tokens.append(tok)
+            if not any(live):
+                return served
+            if pos >= self.max_len:
+                trunc = [slots[i].rid for i in range(B) if live[i]]
+                for i in range(B):
+                    if live[i]:
+                        slots[i].truncated = True
+                        slots[i].done = True
+                        served.append(slots[i])
+                obs_warn(
+                    f"requests {trunc} hit max_len={self.max_len} at "
+                    f"position {pos} before max_new_tokens; returned "
+                    "truncated (raise max_len or shorten prompts)",
+                    TruncationWarning,
+                )
+                return served
             logits, cache = self._decode(
                 self.params, cache, jnp.asarray(cur, jnp.int32), jnp.int32(pos)
             )
-            cur = self._sample(logits, reqs)
+            self.decode_steps += 1
+            cur = self._sample(logits, slots)
             pos += 1
-            for i, r in enumerate(reqs):
-                if live[i]:
-                    if len(r.out_tokens) >= r.max_new_tokens:
-                        live[i] = False
-                        continue
+            for i, r in enumerate(slots):
+                if live[i] and len(r.out_tokens) < r.max_new_tokens:
                     r.out_tokens.append(int(cur[i]))
-            if not any(live):
-                break
-            if pos >= self.max_len:
-                break
-        for r in reqs:
-            r.done = True
-        return reqs
 
     def _sample(self, logits: jax.Array, reqs: list[Request]) -> np.ndarray:
         lg = np.asarray(logits, np.float32)

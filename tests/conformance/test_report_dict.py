@@ -82,6 +82,39 @@ def test_report_dict_carries_obs_metrics_and_drift(tname):
         assert g["count"] >= 1 and g["geomean_ratio"] > 0.0
 
 
+def test_report_dict_carries_serve_payload(tname):
+    cm = compiled_for(NET, tname)
+    d = json.loads(json.dumps(cm.report_dict(), sort_keys=True))
+    s = d["serve"]
+    assert set(s) >= {
+        "initiation_interval_cycles",
+        "bottleneck_module",
+        "predicted_requests_per_s",
+        "predicted_stream_speedup",
+        "stream",
+        "engine",
+    }
+    # the bottleneck module bounds steady-state throughput: one request
+    # retires per initiation interval, never faster than end-to-end
+    ii = s["initiation_interval_cycles"]
+    assert 0.0 < ii <= d["pipeline"]["makespan_cycles"] + 1e-6
+    assert s["bottleneck_module"] in d["cycles_by_module"]
+    assert s["predicted_requests_per_s"] > 0.0
+    assert s["predicted_stream_speedup"] >= 1.0 - 1e-9
+    st = s["stream"]
+    assert st["requests"] >= 1
+    # streaming K requests costs at least one request's makespan and at
+    # most K sequential runs
+    assert st["makespan_cycles"] >= d["pipeline"]["makespan_cycles"] - 1e-6
+    assert (
+        st["makespan_cycles"]
+        <= st["requests"] * d["predicted_total_cycles"] + 1e-6
+    )
+    assert st["weighted_completion_cycles"] > 0.0
+    assert sorted(st["request_order"]) == list(range(st["requests"]))
+    assert s["engine"] is None  # no replica served this memoized model
+
+
 def test_report_dict_carries_aot_stats(tname):
     aot = aot_for(NET, tname)  # memoized: to_aot() pins cm._aot
     params, x = io_for(NET)

@@ -1,0 +1,152 @@
+"""ServeEngine bug-batch regressions (PR 8).
+
+Each test here fails on the pre-fix engine:
+
+* refill — the docstring always promised finished slots refill between
+  decode steps, but the engine served disjoint batches: short+long
+  submitted together must finish in fewer lock-step decode iterations
+  than two sequential batches would pay;
+* truncation — ``pos >= max_len`` silently broke the decode loop and
+  returned short outputs with no signal;
+* queue race — ``empty()`` then ``get()`` blocks forever if another
+  consumer drains the queue between the two calls.
+"""
+
+import queue
+import threading
+import warnings
+
+import jax
+import numpy as np
+
+from repro.models import LM, ModelConfig
+from repro.serving import Request, ServeEngine
+from repro.serving.engine import TruncationWarning
+
+TINY = ModelConfig(
+    name="tiny", family="dense", n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
+    d_ff=64, vocab=64,
+)
+
+
+def _engine(**kw):
+    model = LM(TINY)
+    params = model.init(jax.random.key(0))
+    return ServeEngine(model, params, **kw)
+
+
+def _prompt(rng, n):
+    return rng.integers(1, TINY.vocab, n).astype(np.int32)
+
+
+def test_finished_slots_refill_between_decode_steps():
+    """With slots=2 and max_new (10, 2, 10), the short request's slot
+    must be recycled mid-flight: pre-fix the engine pays two sequential
+    batches (9 + 9 = 18 decode steps); with refill the third request
+    rides the first batch's remaining steps (~10)."""
+    rng = np.random.default_rng(1)
+    eng = _engine(batch_slots=2, max_len=64)
+    for rid, max_new in enumerate((10, 2, 10)):
+        eng.submit(Request(rid, _prompt(rng, 8), max_new_tokens=max_new))
+    done = {r.rid: r for r in eng.run()}
+    assert sorted(done) == [0, 1, 2]
+    for r in done.values():
+        assert r.done and not r.truncated
+        assert len(r.out_tokens) == r.max_new_tokens
+    assert eng.refills >= 1
+    assert eng.decode_steps <= 12  # pre-fix: 18
+
+
+def test_refilled_row_decodes_like_a_fresh_batch():
+    """The single-row prefill path must splice a cache row equivalent to
+    serving the request alone (greedy, so tokens are deterministic).
+
+    The refill prompt is sized to the exact lock-step position at retire
+    time (plen 8 + 2 decode steps = 10), so neither path pads and the
+    two token rows are identical — left-padding width changes logits, so
+    a shorter prompt would only be *approximately* comparable."""
+    rng = np.random.default_rng(2)
+    p_long, p_short, p_next = _prompt(rng, 8), _prompt(rng, 6), _prompt(rng, 10)
+    eng = _engine(batch_slots=2, max_len=64)
+    eng.submit(Request(0, p_long, max_new_tokens=12))
+    eng.submit(Request(1, p_short, max_new_tokens=3))
+    eng.submit(Request(2, p_next, max_new_tokens=5))
+    done = {r.rid: r for r in eng.run()}
+    assert eng.refills == 1
+    solo = _engine(batch_slots=1, max_len=64)
+    solo.submit(Request(0, p_next, max_new_tokens=5))
+    (ref,) = solo.run()
+    assert done[2].out_tokens == ref.out_tokens
+
+
+def test_long_prompt_waits_for_next_batch_instead_of_midflight_join():
+    """A queued prompt longer than the batch's current position cannot
+    join lock-step; it must still be served (in a later batch), never
+    dropped."""
+    rng = np.random.default_rng(3)
+    eng = _engine(batch_slots=1, max_len=64)
+    eng.submit(Request(0, _prompt(rng, 4), max_new_tokens=2))
+    eng.submit(Request(1, _prompt(rng, 40), max_new_tokens=2))
+    done = {r.rid: r for r in eng.run()}
+    assert sorted(done) == [0, 1]
+    assert all(len(r.out_tokens) == 2 for r in done.values())
+    assert eng.refills == 0  # 40 > pos when slot 0 freed
+
+
+def test_max_len_sets_truncated_and_warns():
+    rng = np.random.default_rng(4)
+    eng = _engine(batch_slots=1, max_len=12)
+    eng.submit(Request(0, _prompt(rng, 8), max_new_tokens=30))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        (r,) = eng.run()
+    assert r.done and r.truncated
+    assert len(r.out_tokens) < r.max_new_tokens
+    assert any(issubclass(w.category, TruncationWarning) for w in caught)
+
+
+def test_untruncated_requests_keep_flag_clear():
+    rng = np.random.default_rng(5)
+    eng = _engine(batch_slots=2, max_len=64)
+    eng.submit(Request(0, _prompt(rng, 8), max_new_tokens=4))
+    eng.submit(Request(1, _prompt(rng, 8), max_new_tokens=4))
+    assert all(not r.truncated for r in eng.run())
+
+
+class _PollFreeQueue(queue.Queue):
+    """empty() is the race: with concurrent consumers its answer is
+    stale by the time get() runs.  The fixed engine never calls it."""
+
+    def empty(self):  # pragma: no cover - the assertion IS the test
+        raise AssertionError("ServeEngine must not poll Queue.empty()")
+
+
+def test_engine_never_polls_queue_empty():
+    rng = np.random.default_rng(6)
+    eng = _engine(batch_slots=2, max_len=64)
+    eng._queue = _PollFreeQueue()
+    for rid in range(3):
+        eng.submit(Request(rid, _prompt(rng, 6), max_new_tokens=2))
+    done = eng.run()
+    assert len(done) == 3
+
+
+def test_concurrent_submitters_all_get_served():
+    rng = np.random.default_rng(7)
+    eng = _engine(batch_slots=2, max_len=64)
+    prompts = [_prompt(rng, 6) for _ in range(12)]
+
+    def feed(base):
+        for j in range(4):
+            eng.submit(Request(base + j, prompts[base + j], max_new_tokens=2))
+
+    threads = [threading.Thread(target=feed, args=(b,)) for b in (0, 4, 8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    done = []
+    while len(done) < 12:
+        done.extend(eng.run())
+    assert sorted(r.rid for r in done) == list(range(12))
+    assert all(len(r.out_tokens) == 2 for r in done)
