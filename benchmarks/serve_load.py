@@ -21,6 +21,15 @@ stats) land in ``serve_load.json`` (path via ``MATCH_SERVE_LOAD``) — the
 artifact the CI smoke job uploads.  The default sweep gates: at least
 one pair must sustain >= 2x the sequential requests/sec while every
 served output stays bit-exact with the baseline.
+
+PR 9: each served round declares latency/rejection SLOs on the replica
+(generous thresholds — the verdict must be ``ok`` under the normal
+sweep) and the run asserts the verdict lands JSON-safe in
+``report_dict()["obs"]["slo"]``.  A final *overload* round squeezes the
+queue to force :class:`repro.serve.QueueFullError` rejections with the
+flight recorder armed, producing a Perfetto-loadable incident dump
+(``MATCH_INCIDENT_DUMP``, default ``incident_dump.json``) — the second
+artifact the CI smoke job uploads.
 """
 
 from __future__ import annotations
@@ -58,6 +67,17 @@ def _io(g, n: int):
     return params, xs
 
 
+def _slo_specs():
+    from repro.obs import SloSpec
+
+    # generous by construction: the normal sweep must verdict "ok" (the
+    # result() timeout is 300s, so p99 can never legitimately exceed it)
+    return [
+        SloSpec("p99_budget", "latency_p99_us", 300e6, description="tail budget"),
+        SloSpec("rejections", "rejection_rate", 0.25, description="shed bound"),
+    ]
+
+
 def _poisson_round(compiled, params, xs, refs, rate_rps: float) -> dict:
     import jax
 
@@ -71,6 +91,7 @@ def _poisson_round(compiled, params, xs, refs, rate_rps: float) -> dict:
         stream_depth=2,
         queue_capacity=len(xs),  # open loop, no shedding: every request
         # must complete so the bit-exact sweep covers the full set
+        slo=_slo_specs(),
     ) as srv:
         srv.warmup(xs[0])  # AOT batch entry compiles before load arrives
         # open loop against an absolute Poisson arrival schedule: a slow
@@ -102,7 +123,62 @@ def _poisson_round(compiled, params, xs, refs, rate_rps: float) -> dict:
         "p50_us": stats["latency_us"]["p50"],
         "p99_us": stats["latency_us"]["p99"],
         "engine": stats,
+        "slo": stats["slo"],
     }
+
+
+def _overload_round(compiled, params, xs) -> dict:
+    """Deliberately overload a tiny reject-policy replica with the
+    flight recorder armed: the first :class:`QueueFullError` trigger
+    auto-writes a Perfetto-loadable incident dump — the artifact CI
+    uploads alongside ``serve_load.json``."""
+    from repro import obs
+    from repro.serve import ModelServer, QueueFullError
+
+    dump_path = os.environ.get("MATCH_INCIDENT_DUMP", "incident_dump.json")
+    obs.arm_flight(dump_path)
+    try:
+        rejected = 0
+        handles = []
+        with ModelServer(
+            compiled,
+            params,
+            batch_slots=2,
+            stream_depth=1,
+            queue_capacity=2,
+            policy="reject",
+            replica="overload",
+            slo=_slo_specs(),
+        ) as srv:
+            srv.warmup(xs[0])
+            for x in xs:  # no pacing: instantaneous burst, queue must shed
+                try:
+                    handles.append(srv.submit(x))
+                except QueueFullError:
+                    rejected += 1
+            for h in handles:
+                h.result(timeout=300)
+        if rejected == 0:
+            raise AssertionError(
+                "overload round rejected nothing — the admission queue "
+                "stopped bounding depth, the incident path went untested"
+            )
+        doc = json.loads(open(dump_path).read())
+        events = doc.get("traceEvents")
+        meta = doc.get("metadata", {})
+        if not isinstance(events, list) or not events:
+            raise AssertionError(f"{dump_path} is not a loadable Chrome trace")
+        if meta.get("kind") != "match-incident-dump":
+            raise AssertionError(f"{dump_path} lacks incident metadata: {meta}")
+        return {
+            "dump_path": dump_path,
+            "dump_reason": meta.get("reason"),
+            "rejected": rejected,
+            "completed": len(handles),
+            "events": len(events),
+        }
+    finally:
+        obs.disarm_flight()
 
 
 def run(target: str = "", repeat: int = 3) -> None:
@@ -143,6 +219,22 @@ def run(target: str = "", repeat: int = 3) -> None:
             ]
             mid = sorted(rounds, key=lambda r: r["sustained_rps"])[len(rounds) // 2]
             speedup = mid["sustained_rps"] / seq_rps if seq_rps > 0 else 0.0
+            # PR 9: the replica's SLO verdict must land JSON-safe in the
+            # compile report, and the generous objectives must hold
+            slo_doc = json.loads(
+                json.dumps(compiled.report_dict()["obs"]["slo"], sort_keys=True)
+            )
+            eng_slo = slo_doc["engines"].get("serve:r0")
+            if eng_slo is None:
+                raise AssertionError(
+                    "ModelServer(slo=[...]) did not register its engine in "
+                    "report_dict()['obs']['slo']"
+                )
+            if eng_slo["breached"]:
+                raise AssertionError(
+                    f"generous serving SLOs breached under the normal sweep: "
+                    f"{eng_slo['specs']}"
+                )
             key = f"serve_{net}_{tname}"
             emit(f"{key}_seq", seq_us, f"rps={seq_rps:.1f}")
             emit(
@@ -160,6 +252,10 @@ def run(target: str = "", repeat: int = 3) -> None:
             }
             if speedup > best[0]:
                 best = (speedup, f"{net} on {tname}")
+
+    # incident-path smoke: overload the last compiled pair once; writes
+    # the incident_dump.json artifact and validates it loads in Perfetto
+    report["_incident"] = _overload_round(compiled, params, xs)
 
     path = os.environ.get("MATCH_SERVE_LOAD", "serve_load.json")
     with open(path, "w") as fh:

@@ -5,7 +5,7 @@ ablation on one network.
 
   PYTHONPATH=src python examples/compile_cnn_match.py [--json] [--pipeline]
                                                       [--aot] [--trace]
-                                                      [--serve]
+                                                      [--serve] [--slo]
 
 ``--json`` additionally prints the machine-readable deployment report
 (``CompiledModel.report_dict()``) — the same payload CI and the
@@ -25,7 +25,13 @@ the compiled model with a ``repro.serve.ModelServer`` replica — bounded
 admission queue, vmap batch packing, priority-aware rounds — submits a
 mixed-priority burst, proves every served output bit-exact with
 sequential ``run``, and prints the replica stats that land in
-``report_dict()["serve"]``.
+``report_dict()["serve"]``.  ``--slo`` declares burn-rate service-level
+objectives on a replica (``repro.obs.SloSpec``), arms the incident
+flight recorder, induces an overload (tiny reject-policy queue under a
+burst) so the latency/rejection objectives breach, and shows the
+resulting Perfetto-loadable incident dump (``match_incident.json``) —
+then points at the offline views: ``python -m repro.obs slo`` /
+``python -m repro.obs flight``.
 """
 
 import json
@@ -138,6 +144,59 @@ if "--serve" in sys.argv[1:]:
           f"{stats['bottleneck_module']} -> "
           f"{stats['predicted_requests_per_s']:.0f} req/s, stream speedup "
           f"x{stats['predicted_stream_speedup']:.2f}")
+
+# 3c''. SLOs + incident flight recorder on a serving replica (PR 9)
+if "--slo" in sys.argv[1:]:
+    import warnings
+
+    from repro import obs
+    from repro.serve import ModelServer, QueueFullError
+
+    dump_path = "match_incident.json"
+    obs.arm_flight(dump_path)  # first trigger auto-writes the dump
+    served_model = lower(mapped, use_pallas=False, band_tiling=False)
+    specs = [
+        # tight on purpose: the induced overload must breach both
+        obs.SloSpec("p99_budget", "latency_p99_us", 2_000.0,
+                    description="tail latency budget"),
+        obs.SloSpec("rejections", "rejection_rate", 0.10,
+                    description="shed-rate bound"),
+    ]
+    rng = np.random.default_rng(2)
+    burst = [
+        {k: rng.integers(-128, 128, s).astype("float32") for k, s in g.inputs.items()}
+        for _ in range(24)
+    ]
+    rejected = 0
+    with warnings.catch_warnings():
+        # the breach warnings are this demo's point; show them once each
+        warnings.simplefilter("always", obs.SloBreachWarning)
+        with ModelServer(
+            served_model, params, batch_slots=2, stream_depth=1,
+            queue_capacity=2, policy="reject", replica="demo",
+            slo=specs, slo_window_s=60.0,
+        ) as server:
+            server.warmup(burst[0])
+            handles = []
+            for r in burst:  # no pacing: the bounded queue must shed
+                try:
+                    handles.append(server.submit(r))
+                except QueueFullError:
+                    rejected += 1
+            served = [h.result(timeout=120) for h in handles]
+        slo = server.stats()["slo"]
+    obs.disarm_flight()
+    print(f"\nSLO demo: {len(served)} served, {rejected} rejected "
+          f"(queue_capacity=2, reject policy)")
+    for name, s in sorted(slo["specs"].items()):
+        print(f"  {name:12s} {s['kind']:18s} value {s['value']:12.1f} "
+              f"vs {s['threshold']:10.1f} burn {s['burn']:5.2f}x -> {s['state']}")
+    doc = json.loads(Path(dump_path).read_text())
+    print(f"incident dump: {len(doc['traceEvents'])} events -> {dump_path} "
+          f"(reason={doc['metadata']['reason']!r}; load in ui.perfetto.dev)")
+    print("offline views: python -m repro.obs flight match_incident.json")
+    print("               python -m repro.obs slo <report.json>  "
+          "(exit 1 on breach — CI-gateable)")
 
 # 3d. end-to-end observability: one Chrome trace of the whole flow (PR 7)
 if "--trace" in sys.argv[1:]:

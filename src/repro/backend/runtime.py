@@ -316,6 +316,12 @@ class CompiledModel:
             obs.get_tracer().instant(
                 f"divergence:{first.name}", cat="verify", **report.to_dict()
             )
+            # a divergence is an incident: when the flight recorder is
+            # armed this writes a Perfetto dump of the lead-up (PR 9)
+            obs.get_flight().trigger(
+                "verify_divergence", segment=first.name, module=first.module,
+                route=first.route, max_abs_err=report.max_abs_err,
+            )
         return report
 
     # -- accounting -----------------------------------------------------
@@ -445,10 +451,12 @@ class CompiledModel:
             # once a repro.serve.ModelServer has served this model
             "serve": self.serve_dict(),
             # process-wide observability snapshot (PR 7): metric registry
-            # plus this target's predicted-vs-measured drift aggregates
+            # plus this target's predicted-vs-measured drift aggregates,
+            # and (PR 9) the registered SLO engines' burn-rate verdicts
             "obs": {
                 "metrics": obs.metrics_dict(),
                 "drift": obs.drift_dict(t.name),
+                "slo": obs.slo_dict(),
             },
         }
         if self._aot is not None:

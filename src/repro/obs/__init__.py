@@ -1,6 +1,6 @@
-"""repro.obs — observability for the compile -> run pipeline (PR 7).
+"""repro.obs — observability for the compile -> run -> serve pipeline.
 
-One import surface over three small modules:
+One import surface over the observability modules:
 
 * :mod:`repro.obs.trace` — thread-safe span tracer exporting Chrome
   trace-event / Perfetto JSON, with predicted-schedule Gantt lanes
@@ -12,6 +12,17 @@ One import surface over three small modules:
 * :mod:`repro.obs.drift` — continuous predicted-vs-measured drift
   aggregation per (target, module) with :class:`CalibrationDriftWarning`
   pointing back at the PR 4 calibration loop;
+* :mod:`repro.obs.sketch` — mergeable DDSketch-style streaming quantile
+  sketches (PR 9): O(1) insert, bounded memory, relative-accuracy
+  p50/p90/p99, plus the rolling-window variant the serving stack uses;
+* :mod:`repro.obs.slo` — declarative :class:`SloSpec` objectives
+  evaluated over rolling windows with a burn-rate ok→warn→breach state
+  machine, :class:`SloBreachWarning` on transitions, JSON-safe
+  :func:`slo_dict` merged into ``report_dict()["obs"]["slo"]``;
+* :mod:`repro.obs.flight` — an always-on bounded incident flight
+  recorder whose Perfetto-loadable ``dump()`` fires automatically on
+  queue-full, SLO breach, verify divergence or SIGUSR2
+  (``MATCH_FLIGHT=path`` arms persistence);
 * :mod:`repro.obs.log` — the shared ``repro`` logger (``MATCH_LOG``)
   and the :class:`MatchWarning` base every repo warning derives from.
 
@@ -21,7 +32,7 @@ would cycle.  Anything needing repo types (``trace_predicted_schedule``)
 is duck-typed instead.
 
 CLI: ``python -m repro.obs summarize <trace.json>`` / ``drift
-<report.json>``.
+<report.json>`` / ``slo <report.json>`` / ``flight <incident.json>``.
 """
 
 from __future__ import annotations
@@ -34,6 +45,13 @@ from .drift import (
     observe_timings,
     reset_drift,
 )
+from .flight import (
+    FLIGHT_ENV,
+    FlightRecorder,
+    arm_flight,
+    disarm_flight,
+    get_flight,
+)
 from .log import LOG_ENV, MatchWarning, get_logger, log_level, warn
 from .metrics import (
     Counter,
@@ -44,6 +62,16 @@ from .metrics import (
     histogram,
     metrics_dict,
     reset_metrics,
+)
+from .sketch import QuantileSketch, WindowedSketch
+from .slo import (
+    SLO_KINDS,
+    SloBreachWarning,
+    SloEngine,
+    SloSpec,
+    register_engine,
+    reset_slo,
+    slo_dict,
 )
 from .trace import (
     TRACE_ENV,
@@ -60,30 +88,44 @@ from .trace import (
 
 __all__ = [
     "DRIFT_THRESHOLD_ENV",
+    "FLIGHT_ENV",
     "LOG_ENV",
+    "SLO_KINDS",
     "TRACE_ENV",
     "CalibrationDriftWarning",
     "Counter",
+    "FlightRecorder",
     "Gauge",
     "Histogram",
     "MatchWarning",
+    "QuantileSketch",
+    "SloBreachWarning",
+    "SloEngine",
+    "SloSpec",
     "Span",
     "Tracer",
+    "WindowedSketch",
+    "arm_flight",
     "counter",
     "disable_tracing",
+    "disarm_flight",
     "drift_dict",
     "drift_threshold",
     "enable_tracing",
     "gauge",
+    "get_flight",
     "get_logger",
     "get_tracer",
     "histogram",
     "log_level",
     "metrics_dict",
     "observe_timings",
+    "register_engine",
     "reset_drift",
     "reset_metrics",
+    "reset_slo",
     "save_trace",
+    "slo_dict",
     "span",
     "trace_predicted_schedule",
     "tracing_enabled",

@@ -1,6 +1,6 @@
-"""``python -m repro.obs`` — offline views over obs artifacts (PR 7).
+"""``python -m repro.obs`` — offline views over obs artifacts.
 
-Two subcommands, both pure-JSON consumers (no jax, no compile):
+Four subcommands, all pure-JSON consumers (no jax, no compile):
 
 ``summarize <trace.json>``
     Aggregate a Chrome trace produced via ``MATCH_TRACE`` /
@@ -13,6 +13,17 @@ Two subcommands, both pure-JSON consumers (no jax, no compile):
     ``examples/compile_cnn_match.py --json``) and print per-module
     predicted-vs-measured drift ratios from its timed segments, with a
     threshold verdict matching :mod:`repro.obs.drift`.
+
+``slo <report.json>`` (PR 9)
+    Print every registered SLO engine's burn-rate verdict from a
+    ``report_dict()`` JSON's ``["obs"]["slo"]`` payload (spec, kind,
+    windowed value vs threshold, ok/warn/breach state).  Exit code 1
+    when any objective is breached — CI-gateable.
+
+``flight <incident.json>`` (PR 9)
+    Summarize a flight-recorder incident dump (``MATCH_FLIGHT`` /
+    ``obs.get_flight().dump()``): trigger reason + timeline, captured
+    span/request volume, slowest requests, final SLO states.
 """
 
 from __future__ import annotations
@@ -107,6 +118,65 @@ def cmd_drift(path: str) -> int:
     return 0
 
 
+def cmd_slo(path: str) -> int:
+    doc = _load(path)
+    payload = doc.get("obs", {}).get("slo", doc if "engines" in doc else {})
+    engines = payload.get("engines", {})
+    if not engines:
+        print(f"{path}: no registered SLO engines (serve with ModelServer(slo=[...]))")
+        return 0
+    print(f"{path}: {len(engines)} SLO engine(s)")
+    print(f"\n{'engine':<16} {'spec':<14} {'kind':<20} {'value':>12} "
+          f"{'threshold':>10} {'burn':>6}  state")
+    breached = False
+    for ename, e in sorted(engines.items()):
+        for sname, s in sorted(e.get("specs", {}).items()):
+            state = s.get("state", "?")
+            breached = breached or state == "breach"
+            marker = {"ok": "", "warn": "  <- warn", "breach": "  <- BREACH"}.get(state, "")
+            print(
+                f"{ename:<16} {sname:<14} {s.get('kind', '?'):<20} "
+                f"{s.get('value', 0.0):>12.3f} {s.get('threshold', 0.0):>10.3f} "
+                f"{s.get('burn', 0.0):>5.2f}x  {state}{marker}"
+            )
+    print(f"\nverdict: {'BREACHED' if breached else 'ok'} "
+          f"(window {next(iter(engines.values())).get('window_s', '?')}s)")
+    return 1 if breached else 0
+
+
+def cmd_flight(path: str) -> int:
+    doc = _load(path)
+    meta = doc.get("metadata", {})
+    events = doc.get("traceEvents", [])
+    by_ph: dict[str, int] = defaultdict(int)
+    reqs: list[tuple[float, str, dict]] = []
+    for ev in events:
+        by_ph[ev.get("ph", "?")] += 1
+        if ev.get("cat") == "serve" and ev.get("ph") == "X":
+            reqs.append((float(ev.get("dur", 0.0)), ev.get("name", "?"),
+                         ev.get("args", {})))
+    print(f"{path}: incident dump, reason={meta.get('reason', '?')!r}")
+    print(f"events: {by_ph.get('X', 0)} spans, {by_ph.get('i', 0)} instants, "
+          f"{by_ph.get('C', 0)} counter samples, {by_ph.get('M', 0)} metadata")
+    triggers = meta.get("triggers", [])
+    if triggers:
+        print(f"\ntriggers ({len(triggers)}):")
+        for t in triggers[-10:]:
+            print(f"  {t.get('ts_us', 0.0):>14.1f} us  {t.get('reason', '?'):<18} "
+                  f"{t.get('attrs', {})}")
+    if reqs:
+        reqs.sort(reverse=True)
+        print(f"\nslowest requests (of {len(reqs)} captured):")
+        for dur, name, args in reqs[:5]:
+            print(f"  {name:<10} {dur:>12.1f} us  status={args.get('status', '?')} "
+                  f"priority={args.get('priority', '?')}")
+    slo = meta.get("slo", {}).get("engines", {})
+    for ename, e in sorted(slo.items()):
+        states = {n: s.get("state") for n, s in sorted(e.get("specs", {}).items())}
+        print(f"\nSLO {ename}: worst={e.get('worst_state', '?')} {states}")
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     p = argparse.ArgumentParser(prog="python -m repro.obs", description=__doc__)
     sub = p.add_subparsers(dest="cmd", required=True)
@@ -114,9 +184,17 @@ def main(argv: list[str] | None = None) -> int:
     s.add_argument("trace", help="trace file (MATCH_TRACE output)")
     d = sub.add_parser("drift", help="predicted-vs-measured drift from a report_dict JSON")
     d.add_argument("report", help="report_dict() JSON (compile_cnn_match.py --json)")
+    o = sub.add_parser("slo", help="SLO burn-rate verdicts from a report_dict JSON")
+    o.add_argument("report", help="report_dict() JSON carrying obs.slo")
+    f = sub.add_parser("flight", help="summarize a flight-recorder incident dump")
+    f.add_argument("dump", help="incident JSON (MATCH_FLIGHT / get_flight().dump())")
     args = p.parse_args(argv)
     if args.cmd == "summarize":
         return cmd_summarize(args.trace)
+    if args.cmd == "slo":
+        return cmd_slo(args.report)
+    if args.cmd == "flight":
+        return cmd_flight(args.dump)
     return cmd_drift(args.report)
 
 

@@ -23,6 +23,8 @@ from __future__ import annotations
 import math
 import threading
 
+from .sketch import QuantileSketch
+
 __all__ = [
     "Counter",
     "Gauge",
@@ -68,14 +70,18 @@ class Gauge:
 
 
 class Histogram:
-    """Streaming summary: count/sum/min/max plus log2-spaced buckets.
+    """Streaming summary: count/sum/min/max, log2-spaced buckets, and a
+    :class:`repro.obs.sketch.QuantileSketch` for approximate quantiles.
 
     Buckets are powers of two over the observed unit (microseconds for
     the latency histograms) — coarse, but enough to distinguish "one
-    slow segment" from "everything slow" without storing samples.
+    slow segment" from "everything slow" without storing samples.  The
+    embedded sketch (PR 9) adds p50/p90/p99 to :meth:`to_value` with a
+    1% relative-accuracy guarantee, still without storing samples.
     """
 
-    __slots__ = ("name", "count", "total", "min", "max", "buckets", "_lock")
+    __slots__ = ("name", "count", "total", "min", "max", "buckets", "sketch",
+                 "_lock")
 
     def __init__(self, name: str):
         self.name = name
@@ -84,6 +90,7 @@ class Histogram:
         self.min = math.inf
         self.max = -math.inf
         self.buckets: dict[int, int] = {}  # floor(log2(v)) -> count
+        self.sketch = QuantileSketch(relative_accuracy=0.01, max_buckets=512)
         self._lock = threading.Lock()
 
     def observe(self, v: float) -> None:
@@ -97,16 +104,25 @@ class Histogram:
             if v > self.max:
                 self.max = v
             self.buckets[b] = self.buckets.get(b, 0) + 1
+            self.sketch.add(v)
+
+    def quantile(self, q: float) -> float:
+        with self._lock:
+            return self.sketch.quantile(q)
 
     def to_value(self):
         if not self.count:
             return {"count": 0}
+        with self._lock:
+            qs = self.sketch.quantiles()
         return {
             "count": self.count,
             "sum": self.total,
             "mean": self.total / self.count,
             "min": self.min,
             "max": self.max,
+            **qs,
+            "quantile_accuracy": self.sketch.relative_accuracy,
             # JSON keys must be strings; "le_2^k" reads as an upper bound
             "buckets": {f"le_2^{b + 1}": n for b, n in sorted(self.buckets.items())},
         }

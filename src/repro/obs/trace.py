@@ -46,6 +46,8 @@ import time
 from collections import deque
 from pathlib import Path
 
+from . import flight as _flight
+
 __all__ = [
     "TRACE_ENV",
     "Span",
@@ -164,8 +166,12 @@ class Tracer:
     # -- recording -------------------------------------------------------
     def _append(self, name, cat, ts, dur, tid, attrs, pid: int = _PID_LIVE) -> None:
         # deque.append is atomic under the GIL: the enabled hot path
-        # never takes a lock
-        self._events.append((name, cat, float(ts), float(dur), pid, tid, attrs))
+        # never takes a lock.  The same tuple is mirrored into the
+        # flight recorder's bounded ring (one more lock-free append) so
+        # incident dumps carry the spans that led up to the trigger.
+        ev = (name, cat, float(ts), float(dur), pid, tid, attrs)
+        self._events.append(ev)
+        _flight._RECORDER._spans.append(ev)
 
     def span(self, name: str, cat: str = "", lane: str | None = None, **attrs):
         """Context manager recording one complete span.  Returns the
@@ -194,9 +200,7 @@ class Tracer:
         """A zero-duration marker event (divergences, cache decisions)."""
         if not self.enabled:
             return
-        self._events.append(
-            (name, cat, self.now_us(), -1.0, _PID_LIVE, self._tid(lane), attrs or None)
-        )
+        self._append(name, cat, self.now_us(), -1.0, self._tid(lane), attrs or None)
 
     def slice(
         self,

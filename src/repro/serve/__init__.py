@@ -14,7 +14,13 @@ fast.  A :class:`ModelServer` replica fronts a ``CompiledModel`` with:
   :func:`repro.pipeline.schedule.schedule_stream` Smith order, checked
   by the existing ``PipelineSchedule.validate()``;
 * per-request spans on the ``serve:<replica>`` lane plus ``serve.*``
-  metrics, with replica stats in ``report_dict()["serve"]``.
+  metrics, with replica stats in ``report_dict()["serve"]``;
+* service objectives (PR 9): pass :class:`repro.obs.SloSpec` lists to
+  ``ModelServer(slo=[...])`` for rolling burn-rate evaluation, turn on
+  ``shed_expired=True`` to resolve already-expired requests with
+  :class:`DeadlineExceededError` instead of running them, and arm the
+  flight recorder (``MATCH_FLIGHT=path``) for automatic incident dumps
+  on :class:`QueueFullError` / SLO breach.
 
 The LM token-serving loop (continuous batching over prefill/decode)
 lives in :mod:`repro.serving`; this package serves whole-graph
@@ -22,14 +28,22 @@ requests (one inference per request) over any compiled target.
 """
 
 from .batching import BatchedModel
-from .engine import ModelServer
-from .queue import AdmissionQueue, QueueFullError, ServeHandle, ServeRequest
+from .engine import ModelServer, ServeDrainWarning
+from .queue import (
+    AdmissionQueue,
+    DeadlineExceededError,
+    QueueFullError,
+    ServeHandle,
+    ServeRequest,
+)
 
 __all__ = [
     "AdmissionQueue",
     "BatchedModel",
+    "DeadlineExceededError",
     "ModelServer",
     "QueueFullError",
+    "ServeDrainWarning",
     "ServeHandle",
     "ServeRequest",
 ]

@@ -21,7 +21,17 @@ replica loop:
 * every request gets a span on the ``serve:<replica>`` trace lane and
   feeds the ``serve.*`` metrics (`queue_depth`, `rejected`,
   `latency_us`, `p99_us`) that ship in ``report_dict()["obs"]``; the
-  replica's aggregate stats land in ``report_dict()["serve"]``.
+  replica's aggregate stats land in ``report_dict()["serve"]``;
+* latency quantiles come from a rolling
+  :class:`repro.obs.WindowedSketch` (PR 9) — O(1) per request, bounded
+  memory, merge-on-read — not from sorting a sample window on the hot
+  path; pass ``slo=[SloSpec(...)]`` for rolling burn-rate SLO
+  evaluation per round (verdicts in ``report_dict()["obs"]["slo"]``)
+  and ``shed_expired=True`` to resolve already-expired requests with
+  :class:`DeadlineExceededError` at round build instead of running
+  them.  Every request also lands in the always-on flight recorder, so
+  an armed process dumps a Perfetto incident JSON on queue-full or
+  SLO breach.
 
 Bit-exactness: a served output is the vmapped row of the same fused
 executors ``CompiledModel.run`` calls — held per-request by
@@ -40,12 +50,23 @@ import jax
 from repro import obs
 
 from .batching import BatchedModel
-from .queue import AdmissionQueue, QueueFullError, ServeHandle, ServeRequest
+from .queue import (
+    AdmissionQueue,
+    DeadlineExceededError,
+    QueueFullError,
+    ServeHandle,
+    ServeRequest,
+)
 
 if TYPE_CHECKING:
     from repro.backend.runtime import CompiledModel
 
-__all__ = ["ModelServer"]
+__all__ = ["ModelServer", "ServeDrainWarning"]
+
+
+class ServeDrainWarning(obs.MatchWarning):
+    """``close()`` timed out joining a replica's worker loop: a wedged
+    daemon thread is leaking and the stamped stats are mid-flight."""
 
 # how long the serving loop waits on an empty queue before re-checking
 # for shutdown; bounds close() latency, not request latency (a waiting
@@ -63,6 +84,12 @@ class ModelServer:
     entry; ``mode="pipeline"`` runs batches through a batched
     :class:`~repro.pipeline.runtime.PipelinedModel.run_stream` so
     execution modules overlap *within* each batch too.
+
+    ``slo`` takes :class:`repro.obs.SloSpec` objectives evaluated once
+    per round over a ``slo_window_s`` rolling window (breach transitions
+    warn once and fire ``on_breach``); ``shed_expired=True`` resolves
+    requests whose deadline passed before their round with
+    :class:`DeadlineExceededError` instead of running them.
     """
 
     def __init__(
@@ -78,6 +105,10 @@ class ModelServer:
         replica: str = "r0",
         pad_to_slots: bool = True,
         timeout_s: float = 600.0,
+        slo=None,
+        slo_window_s: float = 60.0,
+        on_breach=None,
+        shed_expired: bool = False,
     ):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
@@ -108,10 +139,31 @@ class ModelServer:
         self._completed = 0
         self._rejected = 0
         self._deadline_misses = 0
+        self._shed = 0
         self._rounds = 0
         self._batches = 0
-        self._lat_window: deque[float] = deque(maxlen=512)
+        self._drained = True
+        # rolling latency window: O(1) insert per request, quantiles by
+        # merge-on-read — the PR 9 sketch replaces the sorted-deque path
+        self._lat_sketch = obs.WindowedSketch(
+            window_s=float(slo_window_s), intervals=12, relative_accuracy=0.01
+        )
         self._last_round: dict = {}
+        # declarative service objectives, evaluated once per round over
+        # the same rolling window; verdicts publish process-wide into
+        # report_dict()["obs"]["slo"] under this replica's engine name
+        self.shed_expired = bool(shed_expired)
+        specs = tuple(slo) if slo else ()
+        self.slo = (
+            obs.SloEngine(
+                specs,
+                name=f"serve:{replica}",
+                window_s=float(slo_window_s),
+                on_breach=on_breach,
+            )
+            if specs
+            else None
+        )
 
     # -- lifecycle -------------------------------------------------------
     def start(self) -> "ModelServer":
@@ -125,11 +177,27 @@ class ModelServer:
 
     def close(self) -> None:
         """Stop admitting, drain everything queued, join the loop, and
-        stamp the final stats into ``compiled.attrs["serve"]``."""
+        stamp the final stats into ``compiled.attrs["serve"]``.
+
+        A worker that outlives ``timeout_s`` is a wedged replica, not a
+        slow one: it is reported (``ServeDrainWarning`` + ``drained:
+        False`` in :meth:`stats`) instead of silently leaking a daemon
+        thread behind stats stamped mid-flight."""
         self.queue.close()
         t = self._thread
         if t is not None:
             t.join(self.timeout_s)
+            if t.is_alive():
+                self._drained = False
+                obs.counter("serve.drain_timeouts").inc()
+                obs.warn(
+                    f"serve replica {self.replica!r}: worker loop did not "
+                    f"drain within timeout_s={self.timeout_s:g}s — a wedged "
+                    "daemon thread is leaking and the stamped stats are "
+                    "mid-flight (drained: false)",
+                    ServeDrainWarning,
+                    logger="serve",
+                )
         self._stamp()
 
     def warmup(self, example_inputs: dict) -> "ModelServer":
@@ -182,6 +250,8 @@ class ModelServer:
             self.queue.put(req, timeout=self.timeout_s)
         except QueueFullError:
             self._rejected += 1
+            if self.slo is not None:
+                self.slo.record("rejected", now_s=now * 1e-6)
             raise
         return req.handle
 
@@ -209,6 +279,11 @@ class ModelServer:
         # per-module serialisation
         from repro.pipeline.schedule import schedule_stream
 
+        if self.shed_expired:
+            reqs = self._shed_expired(reqs)
+            if not reqs:
+                self._finish_round()
+                return
         ss = schedule_stream(
             self.compiled.mapped, [r.priority for r in reqs], order="smith"
         )
@@ -229,6 +304,53 @@ class ModelServer:
             self._serve_pipelined(groups)
         else:
             self._serve_aot(groups)
+        self._finish_round()
+
+    def _shed_expired(self, reqs: list[ServeRequest]) -> list[ServeRequest]:
+        """Drop requests whose deadline already passed *before* spending
+        a batch slot on them: the future resolves with
+        :class:`DeadlineExceededError` now instead of a dead result
+        later.  Runs at round build, off the queue's pop order."""
+        now = obs.get_tracer().now_us()
+        fl = obs.get_flight()
+        keep: list[ServeRequest] = []
+        for r in reqs:
+            if r.deadline_us is not None and now > r.deadline_us:
+                self._shed += 1
+                obs.counter("serve.shed").inc()
+                fl.record_request(
+                    rid=r.rid, replica=self.replica, arrival_us=r.arrival_us,
+                    latency_us=now - r.arrival_us, priority=r.priority,
+                    status="shed",
+                )
+                if self.slo is not None:
+                    self.slo.record("shed", now_s=now * 1e-6)
+                r.handle._future.set_exception(
+                    DeadlineExceededError(
+                        f"request {r.rid} expired "
+                        f"{now - r.deadline_us:.0f} us before its round "
+                        f"(shed_expired=True on replica {self.replica!r})"
+                    )
+                )
+            else:
+                keep.append(r)
+        return keep
+
+    def _finish_round(self) -> None:
+        """Round epilogue: evaluate the SLO specs over the rolling
+        window, mark the flight recorder's round counters, stamp."""
+        now_us = obs.get_tracer().now_us()
+        if self.slo is not None:
+            self.slo.evaluate(
+                queue_depth=self.queue.depth,
+                target=self.compiled.target.name,
+                now_s=now_us * 1e-6,
+            )
+        obs.get_flight().record_mark(
+            now_us, f"serve:{self.replica}",
+            queue_depth=self.queue.depth, completed=self._completed,
+            shed=self._shed, rejected=self._rejected,
+        )
         self._stamp()
 
     def _serve_aot(self, groups: list[list[ServeRequest]]) -> None:
@@ -289,19 +411,29 @@ class ModelServer:
 
     def _resolve(self, g: list[ServeRequest], stacked_outs: dict) -> None:
         tracer = obs.get_tracer()
+        fl = obs.get_flight()
         rows = BatchedModel.unstack(stacked_outs, len(g))
         now = tracer.now_us()
+        now_s = now * 1e-6
         lat_hist = obs.histogram("serve.latency_us")
         for r, out in zip(g, rows):
             r.handle._future.set_result(out)
             lat = now - r.arrival_us
             lat_hist.observe(lat)
-            self._lat_window.append(lat)
+            self._lat_sketch.add(lat, now_s=now_s)
             self._completed += 1
             obs.counter("serve.completed").inc()
-            if r.deadline_us is not None and now > r.deadline_us:
+            missed = r.deadline_us is not None and now > r.deadline_us
+            if missed:
                 self._deadline_misses += 1
                 obs.counter("serve.deadline_misses").inc()
+            if self.slo is not None:
+                self.slo.record_request(lat, missed=missed, now_s=now_s)
+            fl.record_request(
+                rid=r.rid, replica=self.replica, arrival_us=r.arrival_us,
+                latency_us=lat, priority=r.priority,
+                status="missed" if missed else "ok", batch=len(g),
+            )
             tracer.complete(
                 f"req{r.rid}",
                 r.arrival_us,
@@ -312,11 +444,16 @@ class ModelServer:
         obs.gauge("serve.p99_us").set(self._quantile(0.99))
 
     # -- reporting -------------------------------------------------------
+    @staticmethod
+    def _now_s() -> float:
+        # the latency window lives on the tracer's timebase (seconds):
+        # adds and merge-on-read must agree on the epoch
+        return obs.get_tracer().now_us() * 1e-6
+
     def _quantile(self, q: float) -> float:
-        if not self._lat_window:
-            return 0.0
-        xs = sorted(self._lat_window)
-        return xs[min(len(xs) - 1, int(q * len(xs)))]
+        """Rolling-window latency quantile from the shared sketch —
+        O(buckets) merge-on-read, never a sort of raw samples."""
+        return self._lat_sketch.quantile(q, now_s=self._now_s())
 
     def stats(self) -> dict:
         """JSON-safe per-replica serving stats (also stamped into
@@ -332,21 +469,30 @@ class ModelServer:
             "completed": self._completed,
             "rejected": self._rejected,
             "deadline_misses": self._deadline_misses,
+            "shed": self._shed,
             "rounds": self._rounds,
             "batches": self._batches,
             "queue_depth": self.queue.depth,
-            "latency_us": {
-                "count": len(self._lat_window),
-                "p50": self._quantile(0.50),
-                "p99": self._quantile(0.99),
-                "mean": (
-                    sum(self._lat_window) / len(self._lat_window)
-                    if self._lat_window
-                    else 0.0
-                ),
-            },
+            "drained": self._drained,
+            "latency_us": self._latency_stats(),
+            "slo": self.slo.to_dict() if self.slo is not None else None,
             "last_round": dict(self._last_round),
             "entries": self.batched.entry_stats(),
+        }
+
+    def _latency_stats(self) -> dict:
+        """The ``stats()["latency_us"]`` payload: same count/p50/p99/mean
+        keys as ever, now from the rolling sketch window (plus p90 and
+        the sketch's declared accuracy)."""
+        merged = self._lat_sketch.merged(now_s=self._now_s())
+        return {
+            "count": merged.count,
+            "p50": merged.quantile(0.50),
+            "p90": merged.quantile(0.90),
+            "p99": merged.quantile(0.99),
+            "mean": merged.mean,
+            "window_s": self._lat_sketch.window_s,
+            "relative_accuracy": merged.relative_accuracy,
         }
 
     def _stamp(self) -> None:

@@ -33,11 +33,23 @@ from typing import Any
 
 from repro import obs
 
-__all__ = ["AdmissionQueue", "QueueFullError", "ServeHandle", "ServeRequest"]
+__all__ = [
+    "AdmissionQueue",
+    "DeadlineExceededError",
+    "QueueFullError",
+    "ServeHandle",
+    "ServeRequest",
+]
 
 
 class QueueFullError(RuntimeError):
     """The bounded admission queue is full and the policy is "reject"."""
+
+
+class DeadlineExceededError(RuntimeError):
+    """The request's deadline passed before it ran; under
+    ``ModelServer(shed_expired=True)`` the server resolves the handle
+    with this instead of spending a batch slot on a dead request."""
 
 
 class ServeHandle:
@@ -111,6 +123,10 @@ class AdmissionQueue:
                 )
                 if not ok:
                     obs.counter("serve.rejected").inc()
+                    obs.get_flight().trigger(
+                        "queue_full", capacity=self.capacity,
+                        policy=self.policy, depth=len(self._heap),
+                    )
                     raise QueueFullError(
                         f"queue still full after {timeout}s (capacity "
                         f"{self.capacity}, policy=block)"
@@ -119,6 +135,12 @@ class AdmissionQueue:
                 raise RuntimeError("queue is closed")
             if len(self._heap) >= self.capacity:
                 obs.counter("serve.rejected").inc()
+                # incident capture: the flight recorder snapshots the
+                # spans/requests that led here (auto-dumps when armed)
+                obs.get_flight().trigger(
+                    "queue_full", capacity=self.capacity,
+                    policy=self.policy, depth=len(self._heap),
+                )
                 raise QueueFullError(
                     f"admission queue full ({self.capacity} waiting requests); "
                     "request rejected (policy=reject)"

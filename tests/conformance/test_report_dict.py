@@ -1,7 +1,8 @@
 """CompiledModel.report_dict() is the machine-readable contract CI and
 the calibration fitter consume: it must stay JSON-serializable on every
 registered target, round-trip losslessly, and carry the pipeline
-timeline (PR 5), AOT stats (PR 6) and observability (PR 7) payloads."""
+timeline (PR 5), AOT stats (PR 6), observability (PR 7) and SLO (PR 9)
+payloads."""
 
 import json
 import warnings
@@ -69,17 +70,32 @@ def test_report_dict_carries_obs_metrics_and_drift(tname):
         cm.run(params, x, timed=True)
     d = json.loads(json.dumps(cm.report_dict()))
     o = d["obs"]
-    assert set(o) == {"metrics", "drift"}
+    assert set(o) == {"metrics", "drift", "slo"}
     assert set(o["metrics"]) >= {"counters", "gauges", "histograms"}
     # the timed run above must show up in the per-module latency
     # histograms and in this target's drift groups
     mods = {ls.module for ls in cm.segments}
     for m in mods:
-        assert o["metrics"]["histograms"][f"runtime.segment_us.{m}"]["count"] >= 1
+        h = o["metrics"]["histograms"][f"runtime.segment_us.{m}"]
+        assert h["count"] >= 1
+        # PR 9: sketch-backed approximate quantiles ride every non-empty
+        # histogram, JSON-round-trippable and ordered
+        assert 0.0 < h["p50"] <= h["p90"] <= h["p99"]
+        assert h["p99"] <= h["max"] * (1.0 + h["quantile_accuracy"])
     assert o["drift"]["threshold"] >= 1.0
     assert set(o["drift"]["groups"]) >= {f"{cm.target.name}/{m}" for m in mods}
     for g in o["drift"]["groups"].values():
         assert g["count"] >= 1 and g["geomean_ratio"] > 0.0
+    # PR 9: the SLO payload is always present and JSON-safe; engines
+    # appear once a ModelServer(slo=[...]) registers one
+    assert set(o["slo"]) >= {"engines", "breached"}
+    assert isinstance(o["slo"]["engines"], dict)
+    assert o["slo"]["breached"] in (True, False)
+    for eng in o["slo"]["engines"].values():
+        assert set(eng) >= {"name", "window_s", "worst_state", "breached", "specs"}
+        for spec in eng["specs"].values():
+            assert spec["state"] in ("ok", "warn", "breach")
+            assert spec["kind"] in obs.SLO_KINDS
 
 
 def test_report_dict_carries_serve_payload(tname):

@@ -119,6 +119,11 @@ def test_server_bit_exact_per_request_and_reports():
     assert eng["rejected"] == 0
     assert eng["latency_us"]["count"] == len(reqs)
     assert eng["latency_us"]["p99"] >= eng["latency_us"]["p50"] > 0.0
+    # PR 9: quantiles come from the rolling sketch (declared accuracy),
+    # the drain result and shed count are first-class stats
+    assert eng["latency_us"]["relative_accuracy"] == 0.01
+    assert eng["drained"] is True
+    assert eng["shed"] == 0
     assert eng["last_round"]["weighted_completion_cycles"] > 0.0
     cm.attrs.pop("serve")  # don't leak replica state into other suites
 
