@@ -1,0 +1,63 @@
+"""Fuzzing throughput row: graphs / invariant-checks per second (PR 10).
+
+Runs a small fixed-seed block of the ``repro.fuzz`` pipeline — generate,
+dispatch, and the static invariant battery on every seed, plus the full
+differential (bit-exact) battery on a subsample — against one target,
+and emits how many graphs and individual invariant checks per second
+the oracle sustains.  The row is a capacity planning number for the CI
+fuzz job (how much coverage a 120 s budget buys), not a gate on graph
+quality; it **does** raise if the block finds a real invariant failure,
+so a regression caught by even this tiny block fails the benchmark run
+loudly instead of shipping.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.loma import SchedulePlanner
+from repro.fuzz import FuzzKnobs, check_case, sample_spec
+from repro.fuzz.oracle import INVARIANTS
+
+from .common import emit
+
+N_SEEDS = 12
+EXEC_EVERY = 6  # full differential battery on every 6th seed
+SEED = 0
+
+
+def run(target: str = "gap9") -> None:
+    knobs = FuzzKnobs(max_ops=8)
+    planner = SchedulePlanner()
+    static = tuple(iv for iv in INVARIANTS if iv not in ("bitexact", "cache"))
+    graphs = 0
+    inv_checks = 0
+    failures: list[str] = []
+    t0 = time.perf_counter()
+    for idx in range(N_SEEDS):
+        s = SEED + idx
+        spec = sample_spec(s, knobs)
+        invs = INVARIANTS if idx % EXEC_EVERY == 0 else static
+        rep = check_case(spec, target, io_seed=s, invariants=invs,
+                         budget=100, planner=planner)
+        graphs += 1
+        inv_checks += len(rep.invariants_checked)
+        failures += [
+            f"seed={s} {f.invariant}@{f.stage}: {f.message}"
+            for f in rep.failures
+        ]
+    dt = time.perf_counter() - t0
+    emit(
+        f"fuzz_coverage_{target}",
+        dt * 1e6 / graphs,
+        f"graphs_per_s={graphs / dt:.2f};inv_checks_per_s={inv_checks / dt:.2f}"
+        f";seeds={graphs};failures={len(failures)}",
+    )
+    if failures:
+        raise AssertionError(
+            "fuzz_coverage found invariant failures:\n  " + "\n  ".join(failures)
+        )
+
+
+if __name__ == "__main__":
+    run()

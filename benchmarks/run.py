@@ -88,6 +88,7 @@ def main() -> None:
         fig8_gap9_micro,
         fig9_10_l1_scaling,
         fig11_resnet_mapping,
+        fuzz_coverage,
         obs_overhead,
         pipeline_throughput,
         pod_roofline_summary,
@@ -111,6 +112,7 @@ def main() -> None:
         "pipeline_throughput": pipeline_throughput,
         "serve_load": serve_load,
         "obs_overhead": obs_overhead,
+        "fuzz_coverage": fuzz_coverage,
         "tpu_kernels": tpu_kernel_schedules,
         "pod_roofline": pod_roofline_summary,
     }

@@ -301,6 +301,44 @@ def _hill_climb(
 # ---------------------------------------------------------------------------
 
 
+def _schedule_preds(schedule) -> list[set[int]]:
+    """preds[j]: direct predecessors the pipelined runtime enforces for
+    segment j — data dependencies (futures) plus per-module lane order
+    (each module's worker walks its lane in order).  Both edge kinds
+    point from lower to higher segment index."""
+    entries = sorted(schedule.entries, key=lambda e: e.index)
+    preds = [set(e.deps) for e in entries]
+    for lane in schedule.lanes().values():
+        for a, b in zip(lane, lane[1:]):
+            preds[b.index].add(a.index)
+    return preds
+
+
+def _virtual_times(schedule) -> tuple[dict[int, float], dict[int, float]]:
+    """Order-respecting (start, finish) per segment for liveness intervals.
+
+    Predicted schedule times can *tie*: a zero-duration structural
+    segment starts and finishes at the same timestamp as whatever its
+    lane runs next, so raw times cannot express "n01s is dead before
+    n03t begins" even when the runtime guarantees it.  Virtual times
+    repair exactly that: each segment starts no earlier than every
+    enforced predecessor's virtual finish and occupies at least one
+    cycle, so runtime-ordered segments always get disjoint half-open
+    intervals while genuinely concurrent ones keep their overlap.
+    """
+    start = {e.index: e.start for e in schedule.entries}
+    finish = {e.index: e.finish for e in schedule.entries}
+    preds = _schedule_preds(schedule)
+    vstart: dict[int, float] = {}
+    vfinish: dict[int, float] = {}
+    for j in sorted(start):
+        s = max([start[j]] + [vfinish[p] for p in preds[j]])
+        vstart[j] = s
+        # a zero-cost structural slot still needs its buffer for a moment
+        vfinish[j] = max(finish[j], s + 1.0)
+    return vstart, vfinish
+
+
 def _pipeline_lives(
     seq_lives: dict,
     mapped: MappedGraph,
@@ -317,11 +355,20 @@ def _pipeline_lives(
     ``stream_depth`` > 1 every buffer gets one rotating copy per extra
     in-flight input (``name@q1``...), all sharing the interval — the
     steady-state inter-stage queues of ``run_stream``.
+
+    Endpoints are the ``_virtual_times`` of the producing/consuming
+    segments, which embeds the runtime's happens-before order into the
+    intervals: whenever ``_pipeline_conflict_fn`` lets X and Y alias (X
+    provably dead before Y's producer P starts), every user of X
+    precedes P, so X's virtual end <= P's virtual start and the
+    half-open intervals are disjoint.  Interval overlap is therefore a
+    sound over-approximation of the aliasing relation — the planner's
+    ``check_no_overlap`` self-check can never contradict a sound offset
+    assignment (a fuzz-found defect of the raw-timestamp intervals).
     """
     graph, segments = mapped.graph, mapped.segments
-    start = {e.index: e.start for e in schedule.entries}
-    finish = {e.index: e.finish for e in schedule.entries}
-    horizon = max(schedule.makespan, 1.0)
+    vstart, vfinish = _virtual_times(schedule)
+    horizon = max([schedule.makespan, 1.0, *vfinish.values()])
     node_seg = {nd.name: i for i, seg in enumerate(segments) for nd in seg.nodes}
     consumed_by: dict[str, list[int]] = {}
     for i, seg in enumerate(segments):
@@ -331,13 +378,11 @@ def _pipeline_lives(
     out: dict[str, tuple[int, float, float]] = {}
     for name, (nb, _s, _e) in seq_lives.items():
         prod_seg = node_seg.get(name)
-        t0 = 0.0 if prod_seg is None else start[prod_seg]
-        ends = [finish[c] for c in consumed_by.get(name, [])]
+        t0 = 0.0 if prod_seg is None else vstart[prod_seg]
+        ends = [vfinish[c] for c in consumed_by.get(name, [])]
         if prod_seg is not None:
-            ends.append(finish[prod_seg])
+            ends.append(vfinish[prod_seg])
         t1 = (horizon + 1.0) if name in outputs else max(ends, default=t0)
-        # a zero-cost structural slot still needs its buffer for a moment
-        t1 = max(t1, t0 + 1.0)
         for q in range(stream_depth):
             out[name if q == 0 else f"{name}@q{q}"] = (nb, t0, t1)
     return out
@@ -348,20 +393,16 @@ def _happens_before(schedule) -> list[set[int]]:
     starts at RUNTIME.
 
     The pipelined runtime enforces exactly two orderings: data
-    dependencies (futures) and per-module lane serialisation (each
-    module's worker walks its lane in order).  Predicted schedule
-    *times* guarantee nothing — host wall-clock is unrelated to modeled
-    cycles — so soundness arguments must use this relation, never the
-    intervals.  Both edge kinds point from lower to higher segment
-    index, so one pass in index order closes the relation transitively.
+    dependencies (futures) and per-module lane serialisation
+    (``_schedule_preds``).  Predicted schedule *times* guarantee
+    nothing — host wall-clock is unrelated to modeled cycles — so
+    soundness arguments must use this relation, never the intervals.
+    Both edge kinds point from lower to higher segment index, so one
+    pass in index order closes the relation transitively.
     """
-    entries = sorted(schedule.entries, key=lambda e: e.index)
-    preds = [set(e.deps) for e in entries]
-    for lane in schedule.lanes().values():
-        for a, b in zip(lane, lane[1:]):
-            preds[b.index].add(a.index)
-    before: list[set[int]] = [set() for _ in entries]
-    for j in range(len(entries)):
+    preds = _schedule_preds(schedule)
+    before: list[set[int]] = [set() for _ in preds]
+    for j in range(len(preds)):
         for p in preds[j]:
             before[j] |= before[p]
             before[j].add(p)
@@ -543,8 +584,10 @@ def plan_memory(
         lives = _pipeline_lives(lives, mapped, schedule, stream_depth)
         # aliasing decisions must follow what the dependency-driven
         # runtime guarantees (happens-before), not the predicted times —
-        # the intervals above are kept for reporting and self-checks
-        # (they are a subset of the happens-before conflicts)
+        # the intervals above are kept for reporting and self-checks,
+        # and _pipeline_lives builds them on virtual times so interval
+        # overlap over-approximates the happens-before conflicts (the
+        # self-check can never contradict the offsets chosen here)
         before = _happens_before(schedule)
         conflict_fn = _pipeline_conflict_fn(mapped, before)
         plan_attrs.update(

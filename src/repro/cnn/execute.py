@@ -116,8 +116,14 @@ def apply_node(n: Node, p: dict, xs: list) -> jnp.ndarray:
         # integer/quantized activations to float32
         return jnp.maximum(xs[0], jnp.zeros((), xs[0].dtype))
     if n.op == "add":
-        if len(xs) == 2:
-            return xs[0] + xs[1]
+        if len(xs) >= 2:
+            # n-ary elementwise join: residual ladders and fuzz-generated
+            # graphs merge 2..k branches in one node — sum them all, never
+            # silently drop operands past the second
+            total = xs[0]
+            for x in xs[1:]:
+                total = total + x
+            return total
         # constant addend (un-folded requant chains): x + B
         return xs[0] + _scalar(p, n, "addend", 0.0)
     if n.op == "avgpool":
@@ -136,9 +142,16 @@ def apply_node(n: Node, p: dict, xs: list) -> jnp.ndarray:
     if n.op in ("reshape", "identity"):
         return xs[0]
     if n.op == "mul":
-        if len(xs) == 2:
-            return xs[0] * xs[1]
+        if len(xs) >= 2:
+            total = xs[0]
+            for x in xs[1:]:
+                total = total * x
+            return total
         return xs[0] * _scalar(p, n, "scale", 1.0)
+    if n.op == "concat":
+        # channel-axis concatenation (NHWC last axis); flat (B, C) rows
+        # concatenate along their feature axis, which is also axis -1
+        return jnp.concatenate(xs, axis=-1)
     if n.op == "div":
         if len(xs) == 2:
             return xs[0] / xs[1]

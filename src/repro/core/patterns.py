@@ -100,8 +100,12 @@ def _int_attr(n: Node, k: str, default: int = 1) -> int:
 def default_workload(node: Node) -> Workload | None:
     """Build a Workload for a single un-fused node (fallback path).
 
-    Returns None for structural ops (reshape, concat, ...) that carry no
-    arithmetic worth scheduling — those cost ~0 on any module.
+    Returns None for structural ops (reshape, ...) that carry no
+    arithmetic worth scheduling — those cost ~0 on any module.  A
+    ``concat`` that declares its output geometry (C = sum of the input
+    channel counts) is priced as an elementwise copy of its output so
+    join graphs get a schedulable fallback segment on every target; a
+    geometry-less concat stays structural.
     """
     eb = _int_attr(node, "elem_bytes", 1)
     if node.op == "conv2d":
@@ -147,7 +151,9 @@ def default_workload(node: Node) -> Workload | None:
             out_bytes=eb,
             attrs=dict(node.attrs),
         )
-    if node.op in ("add", "relu", "requant", "bias_add", "mul", "clip"):
+    if node.op == "concat" and not node.has_geometry():
+        return None  # no declared output shape: keep the structural path
+    if node.op in ("add", "relu", "requant", "bias_add", "mul", "clip", "concat"):
         # elementwise over the *output* geometry (channels = K when the
         # node sits after a conv/dense producer, else C)
         from .workload import LoopDim, Operand, Workload as W

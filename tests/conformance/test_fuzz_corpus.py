@@ -1,0 +1,41 @@
+"""Replay the fuzz regression corpus as ordinary parametrized tests.
+
+Every JSON case under ``tests/conformance/corpus/`` is a once-failing,
+now-fixed minimal repro the shrinker produced (``python -m repro.fuzz
+run`` writes them).  Replaying a case re-runs exactly the invariant it
+captured on its frozen spec — a pass means the contract holds on that
+graph today; a fail means a past bug regressed.  Cases replay only on
+targets in the active conformance shard (``MATCH_CONFORMANCE_TARGETS``).
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+import pytest
+
+from repro.fuzz import load_cases, replay_case
+
+from .harness import BUDGET, TARGETS
+
+CORPUS_DIR = Path(__file__).parent / "corpus"
+
+_ALL = load_cases(CORPUS_DIR)
+_CASES = [(p, c) for p, c in _ALL if c["target"] in TARGETS]
+
+
+def test_corpus_exists():
+    """The corpus ships with the repo: losing it would silently disable
+    the whole regression net."""
+    assert _ALL, f"no fuzz corpus cases under {CORPUS_DIR}"
+
+
+@pytest.mark.parametrize(
+    "path,case", _CASES, ids=[p.stem for p, _ in _CASES]
+)
+def test_corpus_case_replays_clean(path, case):
+    rep = replay_case(case, budget=BUDGET)
+    assert rep.ok, (
+        f"corpus case {path.name} regressed: "
+        + "; ".join(f"{f.invariant}@{f.stage}: {f.message}" for f in rep.failures)
+    )
